@@ -1,0 +1,120 @@
+"""Paper Tables 1-3: running time of EPSM vs the best known algorithms for
+short patterns on a genome sequence, a protein sequence and a natural
+language text (the paper uses 4MB texts, 1000 patterns per length,
+m in {2,...,32}; defaults here are scaled for CPU CI — pass full=True for
+paper-scale).
+
+Caveat recorded in EXPERIMENTS.md: the paper measures SSE4.2 hardware; we
+measure the TPU-adapted algorithms under XLA-CPU, so absolute numbers differ
+but the claim under test is the RELATIVE ordering (packed filters beat
+character-at-a-time scanning for short patterns).
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import numpy as np
+
+import jax
+
+from repro.core import baselines, epsm
+from repro.data import corpus
+
+ALGOS = {
+    "EPSM": lambda t, p: epsm.find(t, p, algo="auto"),
+    "EPSMa": lambda t, p: epsm.find(t, p, algo="epsma"),
+    "EPSMb": lambda t, p: epsm.find(t, p, algo="epsmb"),
+    "EPSMc": lambda t, p: epsm.find(t, p, algo="epsmc"),
+    "PackedNaive": baselines.packed_naive,
+    "SO": baselines.shift_or,
+    "KMP": baselines.kmp_dfa,
+    "RK": baselines.rabin_karp,
+    "HASH3": baselines.hash3,
+    "BNDM": baselines.bndm,
+}
+
+DEFAULT_M = (2, 4, 8, 12, 16, 24, 32)
+FULL_M = (2, 4, 6, 8, 12, 16, 20, 24, 28, 32)
+
+
+def _time_one(fn, t, p, reps=3) -> float:
+    # close over the concrete pattern: skip-based baselines (kmp/hash3/bndm)
+    # build their tables in host preprocessing, exactly as real impls do;
+    # timing covers the compiled search phase.
+    jfn = jax.jit(lambda tt: fn(tt, p))
+    mask = jfn(t)
+    mask.block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jfn(t).block_until_ready()
+    return (time.perf_counter() - t0) / reps
+
+
+def run_table(
+    corpus_name: str,
+    *,
+    size: int = 1_000_000,
+    lengths=DEFAULT_M,
+    n_patterns: int = 3,
+    algos=None,
+    verify: bool = True,
+) -> Dict[str, Dict[int, float]]:
+    """Returns algo -> {m: seconds per pattern}; verifies exactness on the way."""
+    text = corpus.make_corpus(corpus_name, size, seed=0)
+    results: Dict[str, Dict[int, float]] = {}
+    chosen = algos or list(ALGOS)
+    for m in lengths:
+        pats = corpus.extract_patterns(text, m, n_patterns, seed=m)
+        oracle = None
+        for name in chosen:
+            fn = ALGOS[name]
+            if name == "BNDM" and m > 31:
+                continue
+            if name == "HASH3" and m < 3:
+                continue
+            times = []
+            for i, p in enumerate(pats):
+                times.append(_time_one(fn, text, p))
+                if verify and i == 0:
+                    got = np.asarray(fn(text, p))
+                    if oracle is None:
+                        oracle = got  # first algo defines; all must agree
+                    else:
+                        assert np.array_equal(got, oracle), (name, m)
+            results.setdefault(name, {})[m] = float(np.mean(times))
+    return results
+
+
+def format_table(results: Dict[str, Dict[int, float]], title: str) -> str:
+    lengths = sorted(next(iter(results.values())).keys())
+    lines = [f"### {title}", "", "| algo | " + " | ".join(f"m={m}" for m in lengths) + " |",
+             "|---|" + "---|" * len(lengths)]
+    # mark best per column
+    best = {m: min(r.get(m, np.inf) for r in results.values()) for m in lengths}
+    for name, row in results.items():
+        cells = []
+        for m in lengths:
+            v = row.get(m)
+            if v is None:
+                cells.append("-")
+            else:
+                s = f"{v*1e3:.2f}"
+                cells.append(f"**{s}**" if v == best[m] else s)
+        lines.append(f"| {name} | " + " | ".join(cells) + " |")
+    lines.append("")
+    lines.append("(ms per pattern, lower is better, best boldfaced)")
+    return "\n".join(lines)
+
+
+def table_genome(**kw):
+    return run_table("genome", **kw)
+
+
+def table_protein(**kw):
+    return run_table("protein", **kw)
+
+
+def table_english(**kw):
+    return run_table("english", **kw)

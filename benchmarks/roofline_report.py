@@ -1,0 +1,67 @@
+"""Render the roofline table (EXPERIMENTS.md §Roofline) from the dry-run
+JSON records in experiments/dryrun/."""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+from typing import List
+
+DRYRUN_DIR = Path("experiments/dryrun")
+
+
+def load_records(dryrun_dir=DRYRUN_DIR) -> List[dict]:
+    recs = []
+    for f in sorted(Path(dryrun_dir).glob("*.json")):
+        recs.append(json.loads(f.read_text()))
+    return recs
+
+
+def markdown_table(recs: List[dict], mesh: str = "16x16") -> str:
+    rows = [r for r in recs if r["mesh"] == mesh]
+    hdr = (
+        "| arch | shape | kind | compute s | memory s | collective s | "
+        "bottleneck | MODEL/HLO | step bound s |\n"
+        "|---|---|---|---|---|---|---|---|---|"
+    )
+    lines = [hdr]
+    for r in sorted(rows, key=lambda x: (x["arch"], x["shape"])):
+        t = r["roofline"]
+        bound = max(t["compute_s"], t["memory_s"], t["collective_s"])
+        ratio = r.get("useful_flops_ratio")
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['kind'].split('_',1)[1]} "
+            f"| {t['compute_s']:.3g} | {t['memory_s']:.3g} "
+            f"| {t['collective_s']:.3g} | {t['bottleneck']} "
+            f"| {ratio:.2f} | {bound:.3g} |"
+            if ratio is not None
+            else f"| {r['arch']} | {r['shape']} | {r['kind']} | - | - | - | - | - | - |"
+        )
+    return "\n".join(lines)
+
+
+def summary(recs: List[dict]) -> str:
+    lines = []
+    for mesh in ("16x16", "2x16x16"):
+        rows = [r for r in recs if r["mesh"] == mesh]
+        if not rows:
+            continue
+        by_bneck = {}
+        for r in rows:
+            by_bneck.setdefault(r["roofline"]["bottleneck"], []).append(r)
+        lines.append(
+            f"mesh {mesh}: {len(rows)} cells — "
+            + ", ".join(f"{k}-bound: {len(v)}" for k, v in sorted(by_bneck.items()))
+        )
+    return "\n".join(lines)
+
+
+def main():
+    recs = load_records()
+    print(summary(recs))
+    print()
+    print(markdown_table(recs, "16x16"))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,147 @@
+"""Benchmark harness entry: one function per paper table + framework benches.
+
+    PYTHONPATH=src python -m benchmarks.run [--full] [--size N]
+
+Prints ``name,us_per_call,derived`` CSV rows and writes the markdown tables
+under experiments/benchmarks/.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+from pathlib import Path
+
+import numpy as np
+
+
+def _emit(name: str, us: float, derived: str = ""):
+    print(f"{name},{us:.1f},{derived}")
+
+
+def bench_paper_tables(size: int, full: bool, outdir: Path):
+    from benchmarks import paper_tables as pt
+
+    lengths = pt.FULL_M if full else pt.DEFAULT_M
+    md = []
+    for table_fn, cname, paper_table in (
+        (pt.table_genome, "genome", "Table 1"),
+        (pt.table_protein, "protein", "Table 2"),
+        (pt.table_english, "english", "Table 3"),
+    ):
+        res = table_fn(size=size, lengths=lengths, n_patterns=2)
+        md.append(pt.format_table(res, f"{paper_table}: {cname} ({size/1e6:.1f}MB)"))
+        for algo, row in res.items():
+            for m, sec in row.items():
+                _emit(f"paper/{cname}/{algo}/m{m}", sec * 1e6,
+                      f"GBps={size/sec/1e9:.3f}")
+    (outdir / "paper_tables.md").write_text("\n\n".join(md))
+
+
+def bench_kernels(size: int, outdir: Path):
+    """Pallas kernels (interpret mode = correctness surface) vs pure-JAX core.
+
+    interpret=True executes the kernel body in Python, so wall-time is NOT
+    meaningful on CPU; we emit the pure-JAX packed-core timing as the
+    executable proxy and record kernel/oracle agreement."""
+    import jax
+
+    from repro.core import epsm
+    from repro.data import corpus
+    from repro.kernels.epsma import epsma as k_epsma
+    from repro.kernels.epsmb import epsmb as k_epsmb
+    from repro.kernels.epsmc import epsmc as k_epsmc
+
+    from repro.kernels.multipattern import multipattern as k_mp
+
+    text = corpus.make_corpus("english", min(size, 200_000), seed=0)
+    pats = corpus.extract_patterns(text, 8, 4, seed=9)
+    mp_ok = np.array_equal(
+        np.asarray(k_mp(text, pats)),
+        np.stack([np.asarray(epsm.find(text, p)) for p in pats]),
+    )
+    _emit("kernel/multipattern_p4", 0.0, f"interpret_matches_core={mp_ok}")
+    for name, kfn, m in (
+        ("epsma", k_epsma, 3),
+        ("epsmb", k_epsmb, 8),
+        ("epsmc", k_epsmc, 24),
+    ):
+        p = corpus.extract_patterns(text, m, 1, seed=m)[0]
+        got = np.asarray(kfn(text, p))
+        want = np.asarray(epsm.find(text, p))
+        ok = np.array_equal(got, want)
+        jfn = jax.jit(lambda t, pp: epsm.find(t, pp))
+        jfn(text, p).block_until_ready()
+        t0 = time.perf_counter()
+        for _ in range(3):
+            jfn(text, p).block_until_ready()
+        dt = (time.perf_counter() - t0) / 3
+        _emit(f"kernel/{name}", dt * 1e6, f"interpret_matches_core={ok}")
+
+
+def bench_multipattern(size: int, outdir: Path):
+    import jax
+
+    from repro.core.multipattern import count_multi
+    from repro.data import corpus
+
+    text = corpus.make_corpus("english", size, seed=0)
+    for npat in (1, 8, 32):
+        pats = corpus.extract_patterns(text, 8, npat, seed=5)
+        fn = jax.jit(count_multi)
+        fn(text, pats).block_until_ready()
+        t0 = time.perf_counter()
+        for _ in range(3):
+            fn(text, pats).block_until_ready()
+        dt = (time.perf_counter() - t0) / 3
+        _emit(f"multipattern/p{npat}", dt * 1e6,
+              f"GBps_per_pattern={size*npat/dt/1e9:.3f}")
+
+
+def bench_pipeline(outdir: Path):
+    from repro.data import corpus
+    from repro.data.pipeline import LMDataPipeline
+
+    docs = list(corpus.documents("english", 64, doc_len=8192, seed=0))
+    t0 = time.perf_counter()
+    pipe = LMDataPipeline(docs, seq_len=512, batch_size=8,
+                          blocklist=[b"zzz", b"government "], dedup=True)
+    n = sum(1 for _ in pipe)
+    dt = time.perf_counter() - t0
+    mb = 64 * 8192 / 1e6
+    _emit("pipeline/filter+dedup", dt * 1e6, f"MBps={mb/dt:.1f};batches={n}")
+
+
+def bench_roofline_report(outdir: Path):
+    from benchmarks import roofline_report as rr
+
+    recs = rr.load_records()
+    if not recs:
+        _emit("roofline/records", 0, "no dryrun records yet")
+        return
+    (outdir / "roofline.md").write_text(
+        rr.summary(recs) + "\n\n" + rr.markdown_table(recs, "16x16")
+    )
+    _emit("roofline/records", len(recs), "see experiments/benchmarks/roofline.md")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--size", type=int, default=400_000)
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale: 4MB texts, all 10 lengths")
+    args = ap.parse_args()
+    size = 4_000_000 if args.full else args.size
+    outdir = Path("experiments/benchmarks")
+    outdir.mkdir(parents=True, exist_ok=True)
+
+    print("name,us_per_call,derived")
+    bench_paper_tables(size, args.full, outdir)
+    bench_kernels(size, outdir)
+    bench_multipattern(min(size, 1_000_000), outdir)
+    bench_pipeline(outdir)
+    bench_roofline_report(outdir)
+
+
+if __name__ == "__main__":
+    main()

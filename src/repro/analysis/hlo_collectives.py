@@ -1,0 +1,172 @@
+"""While-loop-aware collective-byte accounting from post-SPMD HLO text.
+
+Collectives that SPMD partitioning places inside a scanned layer body appear
+once in the HLO but execute once per trip.  This parser splits the module
+into computations, reads each while op's trip count from its
+backend_config ("known_trip_count") — falling back to the loop-condition
+constant — and multiplies nested collective bytes accordingly.
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Dict
+
+from repro.analysis.roofline import _COLL_OPS, _shape_bytes
+
+_WHILE_RE = re.compile(r"condition=%?([\w\.\-]+).*?body=%?([\w\.\-]+)")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+_CALL_RE = re.compile(r"(?:call|fusion)\(.*?calls=%?([\w\.\-]+)")
+
+
+def _comp_name(header: str) -> str:
+    s = header.strip()
+    if s.startswith("ENTRY"):
+        s = s[len("ENTRY"):].strip()
+    s = s.lstrip("%")
+    for i, ch in enumerate(s):
+        if ch in " (":
+            return s[:i]
+    return s
+
+
+def _split_computations(hlo: str):
+    comps: Dict[str, list] = {}
+    entry = None
+    cur = None
+    for line in hlo.splitlines():
+        stripped = line.rstrip()
+        if stripped.endswith("{") and (
+            stripped.lstrip().startswith("%") or stripped.lstrip().startswith("ENTRY")
+        ):
+            cur = _comp_name(stripped)
+            comps[cur] = []
+            if stripped.lstrip().startswith("ENTRY"):
+                entry = cur
+            continue
+        if stripped.strip() == "}":
+            cur = None
+            continue
+        if cur is not None:
+            comps[cur].append(line)
+    return comps, entry
+
+
+def _line_collective(line: str):
+    for op in _COLL_OPS:
+        if f" {op}(" in line or f" {op}-start(" in line:
+            if f"{op}-done" in line:
+                return None
+            eq = line.find("=")
+            if eq < 0:
+                return None
+            call = line.find(op, eq)
+            result_part = line[eq + 1 : call]
+            paren = line.find("(", call)
+            operand_part = line[paren:].split("replica_groups")[0]
+            return op, _shape_bytes(operand_part), _shape_bytes(result_part)
+    return None
+
+
+def _zero():
+    return {op: {"count": 0, "operand_bytes": 0, "result_bytes": 0} for op in _COLL_OPS}
+
+
+def collective_stats(hlo: str) -> Dict[str, dict]:
+    comps, entry = _split_computations(hlo)
+
+    direct: Dict[str, dict] = {}
+    whiles: Dict[str, list] = {}  # comp -> [(body_name, trips)]
+    for name, lines in comps.items():
+        stats = _zero()
+        wrefs = []
+        for line in lines:
+            got = _line_collective(line)
+            if got:
+                op, ob, rb = got
+                stats[op]["count"] += 1
+                stats[op]["operand_bytes"] += ob
+                stats[op]["result_bytes"] += rb
+            if " while(" in line:
+                wm = _WHILE_RE.search(line)
+                if wm:
+                    cond_name, body_name = wm.group(1), wm.group(2)
+                    tm = _TRIP_RE.search(line)
+                    if tm:
+                        trips = int(tm.group(1))
+                    else:  # fall back to the max constant in the condition
+                        trips = 1
+                        for cl in comps.get(cond_name, []):
+                            for cm in _CONST_RE.finditer(cl):
+                                trips = max(trips, int(cm.group(1)))
+                    wrefs.append((body_name, trips))
+        direct[name] = stats
+        whiles[name] = wrefs
+
+    def total_for(name, depth=0) -> Dict[str, dict]:
+        if depth > 16 or name not in direct:
+            return _zero()
+        acc = {op: dict(direct[name][op]) for op in _COLL_OPS}
+        for body_name, trips in whiles.get(name, []):
+            inner = total_for(body_name, depth + 1)
+            for op in _COLL_OPS:
+                for k in ("count", "operand_bytes", "result_bytes"):
+                    acc[op][k] += inner[op][k] * trips
+        return acc
+
+    if entry is None:
+        from repro.analysis.roofline import parse_collectives
+
+        return parse_collectives(hlo)
+    return total_for(entry)
+
+
+_META_RE = re.compile(r'op_name="([^"]+)"')
+
+
+def collective_sites(hlo: str, top: int = 15):
+    """Attribute collective result-bytes to source op_names (metadata), with
+    while-trip multiplication — the profiler view for §Perf hillclimbing."""
+    comps, entry = _split_computations(hlo)
+
+    sites: Dict[str, dict] = {}  # comp -> list[(op, bytes, op_name)]
+    whiles: Dict[str, list] = {}
+    per_comp: Dict[str, list] = {}
+    for name, lines in comps.items():
+        rows = []
+        wrefs = []
+        for line in lines:
+            got = _line_collective(line)
+            if got:
+                op, _, rb = got
+                mm = _META_RE.search(line)
+                rows.append((op, rb, mm.group(1) if mm else "?"))
+            if " while(" in line:
+                wm = _WHILE_RE.search(line)
+                if wm:
+                    tm = _TRIP_RE.search(line)
+                    trips = int(tm.group(1)) if tm else 1
+                    wrefs.append((wm.group(2), trips))
+        per_comp[name] = rows
+        whiles[name] = wrefs
+
+    agg: Dict[str, dict] = {}
+
+    def walk(name, mult, depth=0):
+        if depth > 16 or name not in per_comp:
+            return
+        for op, rb, op_name in per_comp[name]:
+            key = f"{op} @ {op_name}"
+            e = agg.setdefault(key, {"bytes": 0, "count": 0})
+            e["bytes"] += rb * mult
+            e["count"] += mult
+        for body, trips in whiles.get(name, []):
+            walk(body, mult * trips, depth + 1)
+
+    if entry is not None:
+        walk(entry, 1)
+    ranked = sorted(agg.items(), key=lambda kv: -kv[1]["bytes"])[:top]
+    return [
+        {"site": k, "bytes": v["bytes"], "count": v["count"]} for k, v in ranked
+    ]

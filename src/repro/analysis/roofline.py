@@ -1,0 +1,132 @@
+"""Roofline-term derivation from compiled dry-run artifacts (DESIGN.md §7).
+
+Hardware model: TPU v5e —
+    197 TFLOP/s bf16 per chip, 819 GB/s HBM, ~50 GB/s/link ICI.
+
+Terms (per chip; cost_analysis of the SPMD-partitioned module is already
+per-device):
+    compute    = HLO_FLOPs / peak_FLOPs
+    memory     = HLO_bytes / HBM_bw
+    collective = collective_bytes / link_bw
+
+collective_bytes is parsed from the post-SPMD HLO: for every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute we
+take max(operand bytes, result bytes) — operands measure what each device
+contributes, results what it receives; max is the per-device traffic proxy
+(all-reduce moves ~2x operand in a ring; we report the raw term and note the
+ring factor in EXPERIMENTS.md).
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Dict
+
+PEAK_FLOPS = 197e12  # bf16 per chip (MXU)
+VPU_FLOPS = 3.9e12  # elementwise/reduce peak (~= MXU/50; vector units)
+HBM_BW = 819e9  # bytes/s
+ICI_BW = 50e9  # bytes/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1,
+    "s4": 1,
+    "u4": 1,
+    "s8": 1,
+    "u8": 1,
+    "s16": 2,
+    "u16": 2,
+    "f16": 2,
+    "bf16": 2,
+    "s32": 4,
+    "u32": 4,
+    "f32": 4,
+    "s64": 8,
+    "u64": 8,
+    "f64": 8,
+    "c64": 8,
+    "c128": 16,
+}
+
+_COLL_OPS = (
+    "all-reduce",
+    "all-gather",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"(pred|[suf]\d+|bf16|c64|c128)\[([0-9,]*)\]")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES.get(dt, 4)
+    return total
+
+
+def parse_collectives(hlo_text: str) -> Dict[str, dict]:
+    """Per-op-kind operand/result byte totals from post-partitioning HLO."""
+    stats = {
+        op: {"count": 0, "operand_bytes": 0, "result_bytes": 0} for op in _COLL_OPS
+    }
+    for line in hlo_text.splitlines():
+        for op in _COLL_OPS:
+            marker = f" {op}("
+            start_marker = f" {op}-start("
+            if marker not in line and start_marker not in line:
+                continue
+            # skip -done ops (they restate the -start shapes)
+            if f"{op}-done" in line:
+                continue
+            eq = line.find("=")
+            if eq < 0:
+                continue
+            lhs_call = line.find(op, eq)
+            result_part = line[eq + 1 : lhs_call]
+            paren = line.find("(", lhs_call)
+            operand_part = line[paren : line.rfind(")") + 1]
+            # strip metadata clauses that could contain shapes
+            operand_part = operand_part.split("replica_groups")[0]
+            stats[op]["count"] += 1
+            stats[op]["result_bytes"] += _shape_bytes(result_part)
+            stats[op]["operand_bytes"] += _shape_bytes(operand_part)
+            break
+    return stats
+
+
+def collective_bytes(stats: Dict[str, dict]) -> int:
+    return sum(
+        max(s["operand_bytes"], s["result_bytes"]) for s in stats.values()
+    )
+
+
+def roofline_terms(
+    hlo_flops_per_chip: float,
+    hlo_bytes_per_chip: float,
+    coll_bytes_per_chip: float,
+    vpu_flops_per_chip: float = 0.0,
+) -> Dict[str, float]:
+    # hlo_flops = MXU (dot) flops when vpu_flops is passed separately
+    compute = hlo_flops_per_chip / PEAK_FLOPS + vpu_flops_per_chip / VPU_FLOPS
+    memory = hlo_bytes_per_chip / HBM_BW
+    collective = coll_bytes_per_chip / ICI_BW
+    terms = {"compute_s": compute, "memory_s": memory, "collective_s": collective}
+    dominant = max(terms, key=terms.get)
+    terms["bottleneck"] = dominant.replace("_s", "")
+    total = max(compute, memory, collective)
+    terms["roofline_fraction_compute"] = compute / total if total > 0 else 0.0
+    return terms
+
+
+def summarize(record: dict) -> str:
+    t = record["roofline"]
+    return (
+        f"{record['arch']}/{record['shape']}@{record['mesh']}: "
+        f"C={t['compute_s']*1e3:.2f}ms M={t['memory_s']*1e3:.2f}ms "
+        f"X={t['collective_s']*1e3:.2f}ms -> {t['bottleneck']}"
+    )

@@ -1,0 +1,2 @@
+from repro.configs.registry import ARCHS, ARCH_IDS, all_cells, get_arch, reduced_config
+from repro.configs.shapes import GNN_SHAPES, LM_SHAPES, RECSYS_SHAPES, ShapeCell, pad_to

@@ -1,0 +1,41 @@
+"""Core EPSM library: the paper's contribution as composable JAX modules."""
+
+from repro.core.epsm import (
+    EPSMA_MAX,
+    EPSMB_MAX,
+    EPSMC_BETA,
+    EPSMC_KBITS,
+    count,
+    count_jit,
+    epsma,
+    epsmb,
+    epsmc,
+    find,
+    find_jit,
+    positions,
+    select_algo,
+)
+from repro.core.multipattern import PatternSet, contains_any, count_multi, find_multi
+from repro.core.baselines import BASELINES, naive_np
+
+__all__ = [
+    "EPSMA_MAX",
+    "EPSMB_MAX",
+    "EPSMC_BETA",
+    "EPSMC_KBITS",
+    "BASELINES",
+    "PatternSet",
+    "contains_any",
+    "count",
+    "count_jit",
+    "count_multi",
+    "epsma",
+    "epsmb",
+    "epsmc",
+    "find",
+    "find_jit",
+    "find_multi",
+    "naive_np",
+    "positions",
+    "select_algo",
+]

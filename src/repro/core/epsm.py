@@ -1,0 +1,317 @@
+"""EPSM — Exact Packed String Matching (Faro & Kulekci, 2012) in JAX.
+
+The paper dispatches on pattern length m:
+
+  * EPSMa (0 < m < 4):  per-character broadcast compare + shifted AND
+                        (wscmp = cmpeq_epi8 + movemask on SSE).
+  * EPSMb (4 <= m < 16): packed 4-gram anchor compare + verification
+                        (wsmatch = mpsadbw on SSE).
+  * EPSMc (m >= 16):    block fingerprint filter (wscrc = crc32_u64 on SSE)
+                        with stride (floor(m/beta)-1)*beta, then verification.
+
+TPU adaptation (see DESIGN.md §2): SSE's 16-lane word becomes a whole vector
+tile; wsmatch becomes a pack-4-bytes-into-int32-lane single compare; wscrc
+becomes a multiplicative matmul hash; occurrence lists become dense boolean
+match-start masks; the 2^k bucket table of EPSMc becomes a dense
+fingerprint-vs-offset comparison (noff <= m-beta+1 is tiny, and dense compare
+is the TPU idiom — documented as adaptation #6).
+
+All functions return ``mask: bool[n]`` with mask[i] True iff an occurrence of
+``pattern`` starts at text position i.  Everything is jit-compatible; pattern
+length is static (part of the trace).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import packing
+from repro.core.packing import (
+    PACK,
+    as_u8,
+    fingerprint_weights,
+    hash_blocks,
+    pack_u32,
+    pack_word_u32,
+    shift_left,
+    valid_start_mask,
+)
+
+# ---------------------------------------------------------------------------
+# Paper regime thresholds (Section 3: EPSMa for 0<m<4, EPSMb for 4<=m<16,
+# EPSMc for m>=16).
+# ---------------------------------------------------------------------------
+EPSMA_MAX = 4
+EPSMB_MAX = 16
+# EPSMc fingerprint block width.  The paper's wscrc is _mm_crc32_u64, i.e. an
+# 8-byte block; beta=8 also makes the strided-filter exact for every m >= 16
+# (see DESIGN.md).  Must satisfy m >= 2*beta.
+EPSMC_BETA = 8
+EPSMC_KBITS = 11  # paper: k = 11
+
+
+def _to_arrays(text, pattern):
+    t = as_u8(text)
+    p = as_u8(pattern)
+    if p.ndim != 1 or t.ndim != 1:
+        raise ValueError("text and pattern must be 1-D byte arrays")
+    return t, p
+
+
+# ---------------------------------------------------------------------------
+# EPSMa — very short patterns: r = s_0 & (s_1 << 1) & ... & (s_{m-1} << (m-1))
+# ---------------------------------------------------------------------------
+
+def epsma(text, pattern) -> jnp.ndarray:
+    """Shifted-AND of per-character equality masks (paper Fig. 1, top).
+
+    s_j[i] = (t[i] == p[j]); match at i iff AND_j s_j[i+j].  On SSE each s_j
+    covers alpha=16 positions; here one vector op covers the whole tile.
+    The block-crossing checks of the paper (lines 13-14) are unnecessary:
+    shift_left is a logical shift over the whole text, not per 16-byte block.
+    """
+    t, p = _to_arrays(text, pattern)
+    n, m = t.shape[0], p.shape[0]
+    if n < m:
+        return jnp.zeros((n,), dtype=jnp.bool_)
+    acc = jnp.ones((n,), dtype=jnp.bool_)
+    for j in range(m):
+        acc = acc & (shift_left(t, j) == p[j])
+    return acc & valid_start_mask(n, m)
+
+
+# ---------------------------------------------------------------------------
+# EPSMb — short patterns: packed 4-gram anchor + verification
+# ---------------------------------------------------------------------------
+
+def epsmb(text, pattern) -> jnp.ndarray:
+    """Packed-anchor filter (paper Fig. 1, middle).
+
+    The SSE version matches the length-4 prefix of p at every offset of a
+    16-byte window with one mpsadbw.  TPU version: pack every 4-gram of the
+    text into an int32 lane (pack_u32) and compare against the packed 4-byte
+    pattern prefix — one 32-bit vector compare tests four characters at every
+    position.  Remaining m-4 characters are verified with shifted compares
+    (the paper's "naive check", dense-masked because TPU prefers masks over
+    branches).
+    """
+    t, p = _to_arrays(text, pattern)
+    n, m = t.shape[0], p.shape[0]
+    if m < PACK:
+        return epsma(t, p)
+    if n < m:
+        return jnp.zeros((n,), dtype=jnp.bool_)
+    w = pack_u32(t)
+    anchor = pack_word_u32(p[:PACK])
+    acc = w == anchor
+    # Verify the tail (chars 4..m-1).  Packed 4-gram steps where possible:
+    j = PACK
+    while j + PACK <= m:
+        acc = acc & (shift_left(w, j) == pack_word_u32(p[j : j + PACK]))
+        j += PACK
+    for jj in range(j, m):
+        acc = acc & (shift_left(t, jj) == p[jj])
+    return acc & valid_start_mask(n, m)
+
+
+# ---------------------------------------------------------------------------
+# EPSMc — medium patterns: fingerprint filter + verification
+# ---------------------------------------------------------------------------
+
+def _epsmc_stride(m: int, beta: int) -> int:
+    """Inspected-block stride in characters: (floor(m/beta) - 1) * beta.
+
+    Exactness: every occurrence window [x, x+m) contains an aligned beta-block
+    whose start lies in [x, x+m-beta]; consecutive inspected aligned starts
+    are (floor(m/beta)-1)*beta <= m-beta apart, and any window of length
+    m-beta+1 >= stride+1 contains one inspected start.  Requires m >= 2*beta.
+    """
+    q = m // beta
+    return max(1, q - 1) * beta
+
+
+def epsmc(
+    text,
+    pattern,
+    *,
+    beta: int = EPSMC_BETA,
+    kbits: int = EPSMC_KBITS,
+    cand_frac: float = 0.04,
+) -> jnp.ndarray:
+    """Fingerprint filter (paper Fig. 1, bottom), MXU-hash variant.
+
+    Preprocessing: k-bit fingerprints of all beta-wide pattern substrings
+    (offsets 0..m-beta) registered in the paper's 2^k lookup table L.
+    Search: fingerprint aligned text blocks at stride (floor(m/beta)-1)*beta
+    via the strided-reshape view (no gather) + MXU matmul hash; probe L once
+    per block; compact candidate BLOCKS with a fixed-size nonzero and verify
+    all noff window offsets of each by static span slicing; one batched
+    scatter publishes matches.  A dense verification branch (lax.cond) runs
+    when candidates overflow the budget, so exactness never depends on the
+    compaction heuristic.  This shape emerged from three measured §Perf
+    iterations (EXPERIMENTS.md EPSM log): 64.7ms -> 2.8-3.6ms per MB.
+    """
+    t, p = _to_arrays(text, pattern)
+    n, m = t.shape[0], p.shape[0]
+    if m < 2 * beta:
+        return epsmb(t, p)
+    if n < m:
+        return jnp.zeros((n,), dtype=jnp.bool_)
+
+    weights = fingerprint_weights(beta)
+    noff = m - beta + 1
+    # --- preprocessing: fingerprints of pattern substrings -----------------
+    offs = jnp.arange(noff)
+    pat_blocks = p[offs[:, None] + jnp.arange(beta)[None, :]]  # (noff, beta)
+    hp = hash_blocks(pat_blocks, weights, kbits)  # (noff,)
+
+    # --- search: strided aligned block fingerprints ------------------------
+    stride = _epsmc_stride(m, beta)
+    nblk = max(0, (n - beta) // stride + 1)
+    bstart = jnp.arange(nblk) * stride  # aligned inspected block starts
+    # Inspected blocks via pad+reshape+slice: stride >= beta always (m >=
+    # 2*beta), so block i is the first beta bytes of row i — a strided view,
+    # NO gather (§Perf EPSM iteration 3: the 1M-element block gather was the
+    # O(n) floor of the filter phase).
+    t_pad = jnp.pad(t, (0, max(0, nblk * stride + beta - n)))
+    blocks = t_pad[: nblk * stride].reshape(nblk, stride)[:, :beta]
+    ht = hash_blocks(blocks, weights, kbits)  # (nblk,)
+
+    # --- candidate generation: the paper's 2^k table L ----------------------
+    # We first adapted L to a dense (blocks x offsets) compare ("the TPU
+    # idiom"); measurement showed the compare + pair-compaction is the O(n)
+    # floor on the vector backend, so we re-adopted the paper's own lookup
+    # table at BLOCK granularity (§Perf EPSM iteration 3): one 2^k-bool LUT
+    # probe per block, then offset-wise verification only at probed blocks.
+    lut = jnp.zeros((1 << kbits,), jnp.bool_).at[hp].set(True)
+    cand_blk = lut[ht]  # (nblk,) does this block hash-match ANY offset?
+
+    # expected block hit-rate on random text is noff/2^k; budget 4x that
+    # (or cand_frac, whichever is larger) keeps the sparse path hot while
+    # the dense fallback still guarantees exactness on adversarial inputs
+    frac = max(cand_frac, 4.0 * noff / (1 << kbits))
+    budget = max(64, int(nblk * frac))
+    budget = min(budget, nblk)
+    n_cand = cand_blk.sum(dtype=jnp.int32)
+    m_pad = m - beta
+    span = m_pad + m  # candidate starts for a block cover [bstart-m_pad, bstart]
+
+    def sparse_verify(_):
+        (bidx,) = jnp.nonzero(cand_blk, size=budget, fill_value=-1)
+        valid = bidx >= 0
+        bsel = jnp.where(valid, bidx, 0) * stride  # block starts
+        # contiguous span rows around each candidate block (front-padded)
+        t_span = jnp.pad(t, (m_pad, span))
+        rows = t_span[bsel[:, None] + jnp.arange(span)]  # (nb, span)
+        oks, sts = [], []
+        for j in range(noff):  # static slicing within rows; noff is small
+            win = rows[:, m_pad - j : m_pad - j + m]  # window at start bsel-j
+            st = bsel - j
+            ok = (
+                valid
+                & (st >= 0)
+                & (st <= n - m)
+                & jnp.all(win == p[None, :], axis=-1)
+            )
+            oks.append(ok)
+            sts.append(st)
+        # one batched scatter (a scatter per offset dominated at large noff)
+        ok_all = jnp.stack(oks).reshape(-1)
+        st_all = jnp.stack(sts).reshape(-1)
+        mask = jnp.zeros((n,), dtype=jnp.bool_)
+        return mask.at[jnp.where(ok_all, st_all, n)].max(ok_all, mode="drop")
+
+    def dense_verify(_):
+        starts = bstart[:, None] - offs[None, :]  # (nblk, noff)
+        cand = cand_blk[:, None] & (starts >= 0) & (starts <= n - m)
+        safe = jnp.where(cand, starts, 0)
+        windows = t[safe[..., None] + jnp.arange(m)]  # (nblk, noff, m)
+        ok = jnp.all(windows == p[None, None, :], axis=-1) & cand
+        flat_idx = jnp.where(ok, starts, n).reshape(-1)
+        mask = jnp.zeros((n,), dtype=jnp.bool_)
+        return mask.at[flat_idx].max(ok.reshape(-1), mode="drop")
+
+    return lax.cond(n_cand <= budget, sparse_verify, dense_verify, operand=None)
+
+
+# ---------------------------------------------------------------------------
+# Dispatcher (paper Section 3: EPSMa m<4, EPSMb 4<=m<16, EPSMc m>=16)
+# ---------------------------------------------------------------------------
+
+_ALGOS = {
+    "epsma": epsma,
+    "epsmb": epsmb,
+    "epsmc": epsmc,
+}
+
+
+def select_algo(m: int) -> str:
+    """Paper-faithful regime thresholds (tuned for SSE in the paper)."""
+    if m < EPSMA_MAX:
+        return "epsma"
+    if m < EPSMB_MAX:
+        return "epsmb"
+    return "epsmc"
+
+
+# Backend-measured crossover (XLA-CPU, EXPERIMENTS.md §Perf EPSM log):
+# before iteration 3 the fingerprint filter lost to the packed anchor until
+# m ~ 128 on this backend; after re-adopting the paper's 2^k LUT + block
+# compaction it wins from m = 16 — i.e. the PAPER's thresholds are optimal
+# here too.  Kept as a named constant because it is a per-backend tuning
+# surface (re-measure with benchmarks/paper_tables.py on new hardware).
+TUNED_EPSMC_MIN = 16
+
+
+def select_algo_tuned(m: int) -> str:
+    if m < EPSMA_MAX:
+        return "epsma"
+    if m < TUNED_EPSMC_MIN:
+        return "epsmb"
+    return "epsmc"
+
+
+def find(text, pattern, *, algo: str = "auto") -> jnp.ndarray:
+    """Match-start mask for all occurrences of pattern in text."""
+    t, p = _to_arrays(text, pattern)
+    m = p.shape[0]
+    if m == 0:
+        raise ValueError("empty pattern")
+    if algo == "auto":
+        name = select_algo(m)
+    elif algo == "tuned":
+        name = select_algo_tuned(m)
+    else:
+        name = algo
+    if name not in _ALGOS:
+        raise ValueError(
+            f"unknown algo {name!r}; choose from {sorted(_ALGOS)} or auto/tuned"
+        )
+    return _ALGOS[name](t, p)
+
+
+def count(text, pattern, *, algo: str = "auto") -> jnp.ndarray:
+    return find(text, pattern, algo=algo).sum(dtype=jnp.int32)
+
+
+def positions(text, pattern, *, algo: str = "auto"):
+    """Occurrence start positions (host-side; forces a sync)."""
+    import numpy as np
+
+    mask = jax.device_get(find(text, pattern, algo=algo))
+    return np.nonzero(mask)[0]
+
+
+@functools.partial(jax.jit, static_argnames=("algo",))
+def find_jit(text: jnp.ndarray, pattern: jnp.ndarray, *, algo: str = "auto") -> jnp.ndarray:
+    return find(text, pattern, algo=algo)
+
+
+@functools.partial(jax.jit, static_argnames=("algo",))
+def count_jit(text: jnp.ndarray, pattern: jnp.ndarray, *, algo: str = "auto") -> jnp.ndarray:
+    return count(text, pattern, algo=algo)

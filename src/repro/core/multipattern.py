@@ -1,0 +1,76 @@
+"""Multi-pattern packed matching (extension of the paper; cf. Faro & Kulekci,
+"Fast multiple string matching using streaming SIMD extensions technology",
+SPIRE 2012 — reference [10] of the paper).
+
+Patterns of equal length are stacked into a (P, m) matrix and searched with a
+single vmapped packed scan; the text-side packing (pack_u32 / fingerprints)
+is pattern-independent so it is computed once and shared across all P
+patterns (vmap with in_axes=None on the text broadcasts it).
+
+Used by the data pipeline for blocklist filtering (DESIGN.md §4).
+"""
+
+from __future__ import annotations
+
+from typing import Sequence
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import epsm
+from repro.core.packing import as_u8
+
+
+def find_multi(text, patterns, *, algo: str = "auto") -> jnp.ndarray:
+    """Match-start masks for a (P, m) stack of equal-length patterns.
+
+    Returns bool[P, n].
+    """
+    t = as_u8(text)
+    ps = as_u8(patterns)
+    if ps.ndim != 2:
+        raise ValueError("patterns must be (P, m)")
+    return jax.vmap(lambda p: epsm.find(t, p, algo=algo))(ps)
+
+
+def count_multi(text, patterns, *, algo: str = "auto") -> jnp.ndarray:
+    return find_multi(text, patterns, algo=algo).sum(axis=-1, dtype=jnp.int32)
+
+
+def contains_any(text, patterns, *, algo: str = "auto") -> jnp.ndarray:
+    """Scalar bool: does any of the stacked patterns occur in text?"""
+    return find_multi(text, patterns, algo=algo).any()
+
+
+class PatternSet:
+    """Blocklist over patterns of arbitrary (mixed) lengths.
+
+    Groups patterns by length so each group becomes one stacked packed scan.
+    This is the object the data pipeline holds on to.
+    """
+
+    def __init__(self, patterns: Sequence):
+        groups: dict[int, list[np.ndarray]] = {}
+        for p in patterns:
+            arr = np.asarray(jax.device_get(as_u8(p)))
+            if arr.size == 0:
+                raise ValueError("empty pattern in PatternSet")
+            groups.setdefault(arr.size, []).append(arr)
+        self.groups = {
+            m: jnp.asarray(np.stack(ps)) for m, ps in sorted(groups.items())
+        }
+
+    def contains_any(self, text) -> jnp.ndarray:
+        t = as_u8(text)
+        hit = jnp.asarray(False)
+        for stack in self.groups.values():
+            hit = hit | contains_any(t, stack)
+        return hit
+
+    def count_each(self, text) -> jnp.ndarray:
+        """Concatenated per-pattern occurrence counts (group order)."""
+        t = as_u8(text)
+        counts = [count_multi(t, stack) for stack in self.groups.values()]
+        return jnp.concatenate(counts) if counts else jnp.zeros((0,), jnp.int32)

@@ -1,0 +1,95 @@
+"""Byte-packing utilities for packed string matching.
+
+The paper packs alpha = w/log(sigma) characters into one machine word and
+compares them in bulk.  On TPU the analogous trick is packing 4 consecutive
+uint8 characters into one int32 *lane* so that a single 32-bit vector compare
+tests a 4-gram at every position (the TPU-native analogue of SSE's
+``_mm_mpsadbw_epu8`` 4-byte anchor used by EPSMb).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax.numpy as jnp
+
+# Number of bytes packed into one 32-bit lane.  This mirrors the paper's
+# 4-byte mpsadbw anchor (wsmatch matches the length-4 prefix of the pattern).
+PACK = 4
+
+
+def as_u8(x) -> jnp.ndarray:
+    """Coerce bytes / str / ndarray to a uint8 jnp array."""
+    if isinstance(x, str):
+        x = x.encode("utf-8", errors="surrogateescape")
+    if isinstance(x, (bytes, bytearray, memoryview)):
+        x = np.frombuffer(bytes(x), dtype=np.uint8)
+    arr = jnp.asarray(x)
+    if arr.dtype != jnp.uint8:
+        arr = arr.astype(jnp.uint8)
+    return arr
+
+
+def shift_left(x: jnp.ndarray, j: int) -> jnp.ndarray:
+    """Return y with y[i] = x[i + j] (zero padded at the tail).
+
+    This is the vector analogue of the paper's ``s_j << j`` used by EPSMa to
+    align per-character equality masks.  Implemented as a pad+slice so it
+    lowers to a cheap static slice rather than a gather.
+    """
+    if j == 0:
+        return x
+    n = x.shape[-1]
+    pad = [(0, 0)] * (x.ndim - 1) + [(0, j)]
+    return jnp.pad(x, pad)[..., j : j + n]
+
+
+def pack_u32(text_u8: jnp.ndarray) -> jnp.ndarray:
+    """w[i] = t[i] | t[i+1]<<8 | t[i+2]<<16 | t[i+3]<<24  (little endian).
+
+    One uint32 lane now holds the 4-gram starting at position i.  Tail lanes
+    (i > n-4) contain zero-padded garbage; callers mask starts > n-m anyway.
+    """
+    t = text_u8.astype(jnp.uint32)
+    w = t
+    for j in range(1, PACK):
+        w = w | (shift_left(t, j) << (8 * j))
+    return w
+
+
+def pack_word_u32(four_bytes: jnp.ndarray) -> jnp.ndarray:
+    """Pack exactly 4 uint8 values into a scalar uint32 (little endian)."""
+    b = four_bytes.astype(jnp.uint32)
+    return b[0] | (b[1] << 8) | (b[2] << 16) | (b[3] << 24)
+
+
+def valid_start_mask(n: int, m: int) -> jnp.ndarray:
+    """Boolean mask of positions where a length-m occurrence can start."""
+    return jnp.arange(n) <= (n - m)
+
+
+def fingerprint_weights(beta: int, seed: int = 12345) -> jnp.ndarray:
+    """Fixed pseudo-random odd int32 weights for the multiplicative hash.
+
+    The paper fingerprints 8-byte blocks with the crc32 instruction; TPU has
+    no CRC unit, so we use h(block) = (block . r) mod 2^32 masked to k bits,
+    with fixed odd weights r.  The dot product maps onto the MXU.
+    """
+    rng = np.random.RandomState(seed)
+    w = rng.randint(1, 2**31 - 1, size=(beta,)).astype(np.int64) * 2 + 1
+    return jnp.asarray(w & 0x7FFFFFFF, dtype=jnp.int32)
+
+
+def hash_blocks(blocks_u8: jnp.ndarray, weights: jnp.ndarray, kbits: int) -> jnp.ndarray:
+    """k-bit fingerprints of (..., beta) uint8 blocks via int32 dot.
+
+    int32 overflow wraps (two's complement) under XLA, which is exactly the
+    mod-2^32 arithmetic the multiplicative hash wants.
+    """
+    h = jnp.einsum(
+        "...b,b->...",
+        blocks_u8.astype(jnp.int32),
+        weights.astype(jnp.int32),
+        preferred_element_type=jnp.int32,
+    )
+    return (h & ((1 << kbits) - 1)).astype(jnp.int32)

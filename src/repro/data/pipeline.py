@@ -1,0 +1,127 @@
+"""Byte-level LM data pipeline with the paper's technique as a first-class
+stage: EPSM multi-pattern blocklist filtering and fingerprint near-dup
+detection run over every document before batching (DESIGN.md §4).
+
+Documents -> [EPSM blocklist filter] -> [fingerprint dedup] -> pack into
+fixed-length token sequences -> (tokens, targets) batches.  Byte-level
+tokenization (vocab 256 + BOS) keeps the pipeline self-contained.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable, Iterator, List, Optional, Sequence
+
+import numpy as np
+
+import jax
+
+from repro.core.epsm import EPSMC_KBITS
+from repro.core.multipattern import PatternSet
+from repro.core.packing import fingerprint_weights, hash_blocks
+
+BOS = 256  # byte-level vocab: 0..255 bytes + BOS
+VOCAB = 257
+
+
+@dataclasses.dataclass
+class PipelineStats:
+    docs_in: int = 0
+    docs_blocked: int = 0
+    docs_deduped: int = 0
+    docs_out: int = 0
+
+
+class FingerprintDeduper:
+    """Near-duplicate detection by EPSMc-style block fingerprints.
+
+    A document's signature is the set of its k-bit aligned-block fingerprints
+    (the same MXU hash the matcher uses); documents sharing > threshold of
+    their signature with a previously seen one are dropped.
+    """
+
+    def __init__(self, beta: int = 8, kbits: int = EPSMC_KBITS, threshold: float = 0.9):
+        self.beta = beta
+        self.kbits = kbits
+        self.threshold = threshold
+        self.weights = np.asarray(jax.device_get(fingerprint_weights(beta)))
+        self._seen: List[frozenset] = []
+
+    def signature(self, doc: np.ndarray) -> frozenset:
+        n = (len(doc) // self.beta) * self.beta
+        if n == 0:
+            return frozenset()
+        blocks = doc[:n].reshape(-1, self.beta).astype(np.int64)
+        h = (blocks * self.weights[None, :]).sum(axis=1)
+        return frozenset((h & ((1 << self.kbits) - 1)).tolist())
+
+    def is_duplicate(self, doc: np.ndarray) -> bool:
+        sig = self.signature(doc)
+        if not sig:
+            return False
+        for prev in self._seen:
+            inter = len(sig & prev)
+            if inter / max(len(sig), 1) > self.threshold:
+                return True
+        self._seen.append(sig)
+        if len(self._seen) > 4096:  # bounded memory
+            self._seen = self._seen[-2048:]
+        return False
+
+
+class LMDataPipeline:
+    def __init__(
+        self,
+        documents: Iterable[np.ndarray],
+        seq_len: int,
+        batch_size: int,
+        blocklist: Optional[Sequence[bytes]] = None,
+        dedup: bool = False,
+        seed: int = 0,
+    ):
+        self.documents = iter(documents)
+        self.seq_len = seq_len
+        self.batch_size = batch_size
+        self.pattern_set = PatternSet(blocklist) if blocklist else None
+        self.deduper = FingerprintDeduper() if dedup else None
+        self.stats = PipelineStats()
+        self._buffer = np.zeros(0, dtype=np.int32)
+
+    def _clean_docs(self) -> Iterator[np.ndarray]:
+        for doc in self.documents:
+            self.stats.docs_in += 1
+            if self.pattern_set is not None and bool(self.pattern_set.contains_any(doc)):
+                self.stats.docs_blocked += 1
+                continue
+            if self.deduper is not None and self.deduper.is_duplicate(doc):
+                self.stats.docs_deduped += 1
+                continue
+            self.stats.docs_out += 1
+            yield doc
+
+    def _fill(self, need: int):
+        chunks = [self._buffer]
+        have = len(self._buffer)
+        for doc in self._clean_docs():
+            tok = np.concatenate([[BOS], doc.astype(np.int32)])
+            chunks.append(tok)
+            have += len(tok)
+            if have >= need:
+                break
+        self._buffer = np.concatenate(chunks) if chunks else self._buffer
+
+    def __iter__(self):
+        return self
+
+    def __next__(self):
+        need = self.batch_size * (self.seq_len + 1)
+        if len(self._buffer) < need:
+            self._fill(need)
+        if len(self._buffer) < need:
+            raise StopIteration
+        flat = self._buffer[:need].reshape(self.batch_size, self.seq_len + 1)
+        self._buffer = self._buffer[need:]
+        return {
+            "tokens": flat[:, :-1].astype(np.int32),
+            "targets": flat[:, 1:].astype(np.int32),
+        }

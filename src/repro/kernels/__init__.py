@@ -1,0 +1,14 @@
+"""Pallas TPU kernels for the paper's hot path: packed string matching.
+
+The paper's entire contribution is a hand-optimized kernel (SSE packed
+instructions), so this layer is the heart of the reproduction.  Each kernel
+lives in its own subpackage with three files:
+
+  * ``<name>.py`` — the pl.pallas_call kernel with explicit BlockSpec tiling.
+  * ``ops.py``    — the jit'd public wrapper (padding, grid setup, combine).
+  * ``ref.py``    — a pure-jnp oracle the kernel is tested against.
+
+Kernels are written for TPU as the target (VMEM tiles, halo'd BlockSpecs,
+MXU-friendly fingerprint matmuls) and validated in interpret=True mode on
+CPU, which executes the kernel body in Python.
+"""

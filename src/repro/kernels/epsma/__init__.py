@@ -1,0 +1,2 @@
+from repro.kernels.epsma.ops import epsma
+from repro.kernels.epsma.ref import epsma_ref

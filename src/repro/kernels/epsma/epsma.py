@@ -1,0 +1,60 @@
+"""EPSMa Pallas kernel: shifted-AND packed compare for very short patterns.
+
+Paper mapping (Fig. 1 top): on SSE, each 16-byte text block T_i is compared
+against B_j = (p_j)^16 with wscmp, and the per-character equality masks are
+shifted and AND-ed.  On TPU one grid program owns a TILE-byte VMEM block and
+the VPU performs the broadcast equality over the whole tile at once; the
+"shift" of the paper becomes a static slice into a (TILE + next-tile) halo
+buffer, which also replaces the paper's explicit block-crossing checks
+(lines 13-14) — the halo makes crossings just another in-tile position.
+
+BlockSpec layout:
+  text is passed twice under two BlockSpecs, (i,) and (i+1,), so each program
+  sees its own tile plus the following tile (the halo).  The text is padded
+  by one zero tile so the last program's halo is in bounds.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_TILE = 4096  # bytes per grid program; multiple of the (8,128) VREG
+
+
+def _epsma_kernel(cur_ref, nxt_ref, pat_ref, out_ref, *, m: int, tile: int):
+    """One program: match-start mask for `tile` consecutive positions."""
+    full = jnp.concatenate([cur_ref[...], nxt_ref[...]])  # (2*tile,) uint8
+    acc = jnp.ones((tile,), dtype=jnp.bool_)
+    for j in range(m):  # m < 4: fully unrolled, 3 compares + 2 ANDs max
+        # wscmp(T, (p_j)^alpha) << j  ==  full[j : j+tile] == p_j
+        acc = acc & (full[j : j + tile] == pat_ref[j])
+    out_ref[...] = acc.astype(jnp.uint8)
+
+
+def epsma_pallas(
+    text_padded: jnp.ndarray,
+    pattern: jnp.ndarray,
+    *,
+    tile: int = DEFAULT_TILE,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Raw pallas_call; text_padded length must be (ntiles+1)*tile."""
+    m = pattern.shape[0]
+    ntiles = text_padded.shape[0] // tile - 1
+    kernel = functools.partial(_epsma_kernel, m=m, tile=tile)
+    return pl.pallas_call(
+        kernel,
+        grid=(ntiles,),
+        in_specs=[
+            pl.BlockSpec((tile,), lambda i: (i,)),        # current tile
+            pl.BlockSpec((tile,), lambda i: (i + 1,)),    # halo tile
+            pl.BlockSpec((m,), lambda i: (0,)),           # pattern (replicated)
+        ],
+        out_specs=pl.BlockSpec((tile,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((ntiles * tile,), jnp.uint8),
+        interpret=interpret,
+    )(text_padded, text_padded, pattern)

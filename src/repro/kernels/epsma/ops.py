@@ -1,0 +1,33 @@
+"""jit'd public wrapper around the EPSMa Pallas kernel."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.packing import as_u8, valid_start_mask
+from repro.kernels.epsma.epsma import DEFAULT_TILE, epsma_pallas
+
+
+@functools.partial(jax.jit, static_argnames=("tile", "interpret"))
+def _run(text: jnp.ndarray, pattern: jnp.ndarray, *, tile: int, interpret: bool):
+    n = text.shape[0]
+    m = pattern.shape[0]
+    ntiles = max(1, -(-n // tile))  # ceil
+    padded = jnp.zeros(((ntiles + 1) * tile,), dtype=jnp.uint8).at[:n].set(text)
+    mask = epsma_pallas(padded, pattern, tile=tile, interpret=interpret)
+    return mask[:n].astype(jnp.bool_) & valid_start_mask(n, m)
+
+
+def epsma(text, pattern, *, tile: int = DEFAULT_TILE, interpret: bool = True):
+    """Match-start mask via the tiled Pallas kernel."""
+    t, p = as_u8(text), as_u8(pattern)
+    if p.shape[0] == 0:
+        raise ValueError("empty pattern")
+    if p.shape[0] > tile:
+        raise ValueError("pattern longer than tile")
+    if t.shape[0] == 0:
+        return jnp.zeros((0,), dtype=jnp.bool_)
+    return _run(t, p, tile=tile, interpret=interpret)

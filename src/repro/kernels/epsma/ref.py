@@ -1,0 +1,18 @@
+"""Pure-jnp oracle for the EPSMa kernel: dense shifted-AND over the text."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.packing import as_u8, shift_left, valid_start_mask
+
+
+def epsma_ref(text, pattern) -> jnp.ndarray:
+    t, p = as_u8(text), as_u8(pattern)
+    n, m = t.shape[0], p.shape[0]
+    if n < m:
+        return jnp.zeros((n,), dtype=jnp.bool_)
+    acc = jnp.ones((n,), dtype=jnp.bool_)
+    for j in range(m):
+        acc = acc & (shift_left(t, j) == p[j])
+    return acc & valid_start_mask(n, m)

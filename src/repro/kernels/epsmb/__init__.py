@@ -1,0 +1,2 @@
+from repro.kernels.epsmb.ops import epsmb
+from repro.kernels.epsmb.ref import epsmb_ref

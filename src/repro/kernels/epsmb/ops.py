@@ -1,0 +1,56 @@
+"""jit'd public wrapper around the EPSMb Pallas kernel."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.packing import PACK, as_u8, shift_left, valid_start_mask
+from repro.kernels.epsmb.epsmb import DEFAULT_TILE, epsmb_pallas
+
+
+@functools.partial(jax.jit, static_argnames=("tile", "fuse_verify", "interpret"))
+def _run(
+    text: jnp.ndarray,
+    pattern: jnp.ndarray,
+    *,
+    tile: int,
+    fuse_verify: bool,
+    interpret: bool,
+):
+    n = text.shape[0]
+    m = pattern.shape[0]
+    ntiles = max(1, -(-n // tile))
+    padded = jnp.zeros(((ntiles + 1) * tile,), dtype=jnp.uint8).at[:n].set(text)
+    mask = epsmb_pallas(
+        padded, pattern, tile=tile, fuse_verify=fuse_verify, interpret=interpret
+    )
+    mask = mask[:n].astype(jnp.bool_)
+    if not fuse_verify:
+        # paper-faithful path: kernel emits 4-gram anchor candidates; verify
+        # the remaining m-4 characters here (dense masked check).
+        for j in range(PACK, m):
+            mask = mask & (shift_left(text, j) == pattern[j])
+    return mask & valid_start_mask(n, m)
+
+
+def epsmb(
+    text,
+    pattern,
+    *,
+    tile: int = DEFAULT_TILE,
+    fuse_verify: bool = True,
+    interpret: bool = True,
+):
+    """Match-start mask via the tiled packed-anchor Pallas kernel (m >= 4)."""
+    t, p = as_u8(text), as_u8(pattern)
+    m = p.shape[0]
+    if m < PACK:
+        raise ValueError("epsmb requires m >= 4 (use epsma)")
+    if m > tile:
+        raise ValueError("pattern longer than tile")
+    if t.shape[0] == 0:
+        return jnp.zeros((0,), dtype=jnp.bool_)
+    return _run(t, p, tile=tile, fuse_verify=fuse_verify, interpret=interpret)

@@ -1,0 +1,23 @@
+"""Pure-jnp oracle for the EPSMb kernel."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.packing import as_u8, shift_left, valid_start_mask
+from repro.core.packing import pack_u32, pack_word_u32, PACK
+
+
+def epsmb_ref(text, pattern, *, fuse_verify: bool = True) -> jnp.ndarray:
+    """Match-start mask (fuse_verify=True) or 4-gram anchor mask (False)."""
+    t, p = as_u8(text), as_u8(pattern)
+    n, m = t.shape[0], p.shape[0]
+    if n < m:
+        return jnp.zeros((n,), dtype=jnp.bool_)
+    w = pack_u32(t)
+    acc = w == pack_word_u32(p[:PACK])
+    if fuse_verify:
+        for j in range(PACK, m):
+            acc = acc & (shift_left(t, j) == p[j])
+        return acc & valid_start_mask(n, m)
+    return acc & valid_start_mask(n, PACK)

@@ -1,0 +1,2 @@
+from repro.kernels.epsmc.ops import epsmc
+from repro.kernels.epsmc.ref import epsmc_filter_ref, epsmc_ref

@@ -1,0 +1,87 @@
+"""jit'd public wrapper around the EPSMc Pallas kernel."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.epsm import EPSMC_BETA, EPSMC_KBITS
+from repro.core.packing import as_u8, fingerprint_weights, hash_blocks
+from repro.kernels.epsmc.epsmc import epsmc_pallas, plan_tile
+
+
+@functools.partial(
+    jax.jit, static_argnames=("beta", "kbits", "tile", "stride", "interpret")
+)
+def _run(
+    text: jnp.ndarray,
+    pattern: jnp.ndarray,
+    *,
+    beta: int,
+    kbits: int,
+    tile: int,
+    stride: int,
+    interpret: bool,
+):
+    n = text.shape[0]
+    m = pattern.shape[0]
+    m_pad = m - beta
+    ntiles = max(1, -(-n // tile))
+    padded = (
+        jnp.zeros(((ntiles + 2) * tile,), dtype=jnp.uint8)
+        .at[tile : tile + n]
+        .set(text)
+    )
+
+    # preprocessing: fingerprints of all pattern beta-substrings
+    weights = fingerprint_weights(beta)
+    offs = jnp.arange(m - beta + 1)
+    pat_blocks = pattern[offs[:, None] + jnp.arange(beta)[None, :]]
+    hp = hash_blocks(pat_blocks, weights, kbits)
+
+    rows = epsmc_pallas(
+        padded,
+        pattern,
+        hp,
+        weights,
+        n=n,
+        beta=beta,
+        kbits=kbits,
+        tile=tile,
+        stride=stride,
+        interpret=interpret,
+    )  # (ntiles, tile + m_pad)
+
+    # combine: main spans + left aprons (matches starting in the prev tile)
+    main = rows[:, m_pad:].reshape(ntiles * tile)[:n].astype(jnp.bool_)
+    if m_pad == 0:
+        return main
+    apron = rows[:, :m_pad].astype(jnp.bool_)  # row g covers [g*tile-m_pad, g*tile)
+    gidx = (
+        jnp.arange(ntiles)[:, None] * tile - m_pad + jnp.arange(m_pad)[None, :]
+    )
+    safe = jnp.where((gidx >= 0) & (gidx < n) & apron, gidx, n)
+    return main.at[safe.reshape(-1)].max(apron.reshape(-1), mode="drop")
+
+
+def epsmc(
+    text,
+    pattern,
+    *,
+    beta: int = EPSMC_BETA,
+    kbits: int = EPSMC_KBITS,
+    interpret: bool = True,
+):
+    """Match-start mask via the strided fingerprint Pallas kernel (m >= 2*beta)."""
+    t, p = as_u8(text), as_u8(pattern)
+    m = p.shape[0]
+    if m < 2 * beta:
+        raise ValueError(f"epsmc kernel requires m >= {2*beta} (use epsmb)")
+    if t.shape[0] < m:
+        return jnp.zeros((t.shape[0],), dtype=jnp.bool_)
+    tile, stride, _ = plan_tile(m, beta)
+    return _run(
+        t, p, beta=beta, kbits=kbits, tile=tile, stride=stride, interpret=interpret
+    )

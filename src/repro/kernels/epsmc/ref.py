@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for the EPSMc kernel: the core epsmc (itself validated
+against the scalar oracle) plus a trivially-correct dense matcher."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.epsm import epsmc as epsmc_core
+from repro.core.packing import as_u8, shift_left, valid_start_mask
+
+
+def epsmc_ref(text, pattern) -> jnp.ndarray:
+    """Dense shifted-AND ground truth (definition of exact matching)."""
+    t, p = as_u8(text), as_u8(pattern)
+    n, m = t.shape[0], p.shape[0]
+    if n < m:
+        return jnp.zeros((n,), dtype=jnp.bool_)
+    acc = jnp.ones((n,), dtype=jnp.bool_)
+    for j in range(m):
+        acc = acc & (shift_left(t, j) == p[j])
+    return acc & valid_start_mask(n, m)
+
+
+def epsmc_filter_ref(text, pattern, **kw) -> jnp.ndarray:
+    """The pure-JAX epsmc (same filter structure, unfused)."""
+    return epsmc_core(as_u8(text), as_u8(pattern), **kw)

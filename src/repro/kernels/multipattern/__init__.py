@@ -1,0 +1,2 @@
+from repro.kernels.multipattern.ops import multipattern
+from repro.kernels.multipattern.ref import multipattern_ref

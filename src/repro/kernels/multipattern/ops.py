@@ -1,0 +1,36 @@
+"""jit'd public wrapper around the multi-pattern Pallas kernel."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.packing import PACK, as_u8, valid_start_mask
+from repro.kernels.multipattern.multipattern import DEFAULT_TILE, multipattern_pallas
+
+
+@functools.partial(jax.jit, static_argnames=("tile", "interpret"))
+def _run(text, patterns, *, tile, interpret):
+    n = text.shape[0]
+    m = patterns.shape[1]
+    ntiles = max(1, -(-n // tile))
+    padded = jnp.zeros(((ntiles + 1) * tile,), jnp.uint8).at[:n].set(text)
+    masks = multipattern_pallas(padded, patterns, tile=tile, interpret=interpret)
+    return masks[:, :n].astype(jnp.bool_) & valid_start_mask(n, m)[None, :]
+
+
+def multipattern(text, patterns, *, tile: int = DEFAULT_TILE, interpret: bool = True):
+    """(P, m) pattern stack -> bool (P, n) match-start masks; m >= 4."""
+    t = as_u8(text)
+    ps = as_u8(patterns)
+    if ps.ndim != 2:
+        raise ValueError("patterns must be (P, m)")
+    if ps.shape[1] < PACK:
+        raise ValueError("multipattern kernel requires m >= 4")
+    if ps.shape[1] > tile:
+        raise ValueError("pattern longer than tile")
+    if t.shape[0] == 0:
+        return jnp.zeros((ps.shape[0], 0), jnp.bool_)
+    return _run(t, ps, tile=tile, interpret=interpret)

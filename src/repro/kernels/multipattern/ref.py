@@ -1,0 +1,14 @@
+"""Pure-jnp oracle: vmap of the single-pattern EPSMb reference."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.packing import as_u8
+from repro.kernels.epsmb.ref import epsmb_ref
+
+
+def multipattern_ref(text, patterns) -> jnp.ndarray:
+    t, ps = as_u8(text), as_u8(patterns)
+    return jax.vmap(lambda p: epsmb_ref(t, p))(ps)

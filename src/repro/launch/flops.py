@@ -1,0 +1,102 @@
+"""Analytic MODEL_FLOPS per (arch, shape): the useful-work reference for the
+roofline's MODEL_FLOPS / HLO_FLOPS ratio (DESIGN.md §7).
+
+Conventions:
+  * LM train:    6*N*D + 3*L*B*S^2*H*hd      (causal attention ~ half dense)
+  * LM prefill:  2*N*D + 1*L*B*S^2*H*hd
+  * LM decode:   2*N*B + 4*L*B*S*H*hd        (full KV cache read, qk + pv)
+    with N = active (top-k MoE) non-embedding-gather params: the input
+    embedding is a gather (0 FLOPs); the unembed matmul stays.
+  * GNN fwd:     L*(6*E*d^2 + 4*N*d^2) + 2*N*d_feat*d + head; train = 3x fwd
+  * RecSys:      per-model interaction+tower matmul counts; train = 3x fwd.
+    Embedding lookups are gathers: 0 FLOPs (they show up in the memory term).
+"""
+
+from __future__ import annotations
+
+from repro.configs.registry import get_arch
+from repro.configs.shapes import ShapeCell
+
+
+def _lm_flops(cfg, kind: str, B: int, S: int) -> float:
+    V, d = cfg.vocab, cfg.d_model
+    # input embedding is a gather (0 FLOPs); tied models reuse the same matrix
+    # as the (FLOP-bearing) unembed matmul, so only untied models subtract it
+    emb = 0 if cfg.tie_embeddings else V * d
+    N = cfg.active_param_count() - emb
+    L, H, hd = cfg.n_layers, cfg.n_heads, cfg.head_dim
+    if kind == "lm_train":
+        return 6.0 * N * B * S + 6.0 * L * B * S * S * H * hd
+    if kind == "lm_prefill":
+        return 2.0 * N * B * S + 2.0 * L * B * S * S * H * hd
+    if kind == "lm_decode":
+        return 2.0 * N * B + 4.0 * L * B * S * H * hd
+    raise ValueError(kind)
+
+
+def _gnn_flops(cfg, meta: dict, kind: str) -> float:
+    d = cfg.d_hidden
+    if kind == "gnn_batched":
+        N = meta["n_graphs"] * meta["nodes_per_graph"]
+        E = meta["n_graphs"] * meta["edges_per_graph"]
+    elif kind == "gnn_sampled":
+        N, E = meta["sub_nodes"], meta["sub_edges"]
+    else:
+        N, E = meta["n_nodes"], meta["n_edges"]
+    fwd = cfg.n_layers * (6.0 * E * d * d + 4.0 * N * d * d)
+    fwd += 2.0 * N * cfg.d_feat * d
+    if cfg.readout == "node":
+        fwd += 2.0 * N * d * cfg.n_classes
+    else:
+        fwd += 2.0 * N * d * d
+    return 3.0 * fwd  # all gnn shapes are training cells
+
+
+def _mlp_flops(dims, B):
+    f = 0.0
+    for i in range(len(dims) - 1):
+        f += 2.0 * B * dims[i] * dims[i + 1]
+    return f
+
+
+def _recsys_fwd_flops(cfg, B: int) -> float:
+    d = 2 * cfg.embed_dim  # pair embed width for sequence models
+    T = cfg.seq_len
+    if cfg.kind == "din":
+        att = _mlp_flops([4 * d, *cfg.attn_mlp, 1], B * T)  # per-position MLP
+        pool = 2.0 * B * T * d
+        tower = _mlp_flops([3 * d, *cfg.mlp, 1], B)
+        return att + pool + tower
+    if cfg.kind == "dien":
+        dh = cfg.gru_dim
+        gru1 = 3 * 2.0 * B * T * (d + dh) * dh
+        gru2 = 3 * 2.0 * B * T * (dh + dh) * dh
+        att = 2.0 * B * T * dh * d
+        tower = _mlp_flops([d + dh, *cfg.mlp, 1], B)
+        return gru1 + gru2 + att + tower
+    if cfg.kind == "bst":
+        T1 = T + 1
+        proj = 4 * 2.0 * B * T1 * d * d
+        attn = 2 * 2.0 * B * T1 * T1 * d
+        ffn = 2 * 2.0 * B * T1 * d * 4 * d
+        tower = _mlp_flops([T1 * d, *cfg.mlp, 1], B)
+        return cfg.n_blocks * (proj + attn + ffn) + tower
+    if cfg.kind == "dcn":
+        x0 = cfg.n_dense + cfg.n_sparse * cfg.embed_dim
+        cross = cfg.n_cross_layers * 2.0 * B * x0 * x0
+        tower = _mlp_flops([x0, *cfg.mlp, 1], B)
+        return cross + tower
+    raise ValueError(cfg.kind)
+
+
+def model_flops(arch_id: str, shape_id: str) -> float:
+    spec = get_arch(arch_id)
+    cell: ShapeCell = spec.shapes[shape_id]
+    cfg = spec.make_config(shape_id)
+    if spec.family == "lm":
+        return _lm_flops(cfg, cell.kind, cell.meta["batch"], cell.meta["seq"])
+    if spec.family == "gnn":
+        return _gnn_flops(cfg, cell.meta, cell.kind)
+    B = cell.meta.get("n_candidates", cell.meta["batch"])
+    fwd = _recsys_fwd_flops(cfg, B)
+    return 3.0 * fwd if cell.kind == "rs_train" else fwd

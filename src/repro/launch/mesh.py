@@ -1,0 +1,21 @@
+"""Mesh construction.  A FUNCTION, not a module-level constant — importing
+this module never touches jax device state."""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 chips per pod; 2 pods when multi_pod (512 chips total)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh(axis_names=("data", "model")):
+    """Mesh over whatever devices this process actually has (tests/examples).
+    Puts all devices on the first axis."""
+    n = len(jax.devices())
+    shape = (n,) + (1,) * (len(axis_names) - 1)
+    return jax.make_mesh(shape, axis_names)

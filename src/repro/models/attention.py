@@ -1,0 +1,210 @@
+"""Attention: GQA with RoPE, chunked (flash-style) prefill/train attention and
+single-token decode attention against a KV cache.
+
+The chunked path never materializes the full (Sq, Skv) score matrix: it scans
+over KV chunks with online-softmax accumulators, and iterates Q chunks in a
+static python loop so causal scheduling can skip fully-masked KV chunks
+(triangular schedule — the standard TPU flash-attention shape).
+
+Sharding notes (dist/sharding.py):
+  * train/prefill: Q heads shard along 'model' (when n_heads % tp == 0).  GQA
+    KV heads (< tp for every assigned arch) are kept replicated and expanded
+    to H heads per KV *chunk* via a constant-index gather — the operand is
+    replicated and the output is head-sharded, so the expansion is
+    communication-free and only costs one tiny chunk-sized buffer.  This is
+    the Megatron GQA convention adapted to chunked attention.
+  * decode: the KV cache is length-sharded ('model'; flash-decoding); the
+    grouped einsum keeps the KVH dim intact (no head sharding needed for a
+    single query token) and the softmax reduction over shards becomes a psum.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float) -> jnp.ndarray:
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (B, S, H, hd); positions: (S,) or (B, S)."""
+    hd = x.shape[-1]
+    freqs = rope_frequencies(hd, theta)  # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    if angles.ndim == 2:  # (S, hd/2) -> broadcast over batch
+        angles = angles[None]
+    cos = jnp.cos(angles)[:, :, None, :]  # (B, S, 1, hd/2)
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Chunked (flash-style) attention
+# ---------------------------------------------------------------------------
+
+def _chunk_attn_scan(q, k, v, kv_map, qpos0: int, causal: bool, kv_chunk: int, n_kv: int):
+    """Online-softmax scan over the first n_kv KV chunks for one Q chunk.
+
+    q: (B, qc, H, hd); k, v: (B, Skv, KVH, hd); kv_map: (H,) head -> kv head.
+    """
+    B, qc, H, hd = q.shape
+
+    def body(carry, kv_idx):
+        o, m, l = carry
+        ks = lax.dynamic_slice_in_dim(k, kv_idx * kv_chunk, kv_chunk, axis=1)
+        vs = lax.dynamic_slice_in_dim(v, kv_idx * kv_chunk, kv_chunk, axis=1)
+        # GQA expansion: replicated chunk -> head-sharded (B, kc, H, hd);
+        # constant-index gather, communication-free under GSPMD.
+        ks = jnp.take(ks, kv_map, axis=2)
+        vs = jnp.take(vs, kv_map, axis=2)
+        s = jnp.einsum("bqhd,bshd->bhqs", q, ks, preferred_element_type=jnp.float32)
+        s = s / jnp.sqrt(hd).astype(jnp.float32)
+        if causal:
+            qpos = qpos0 + jnp.arange(qc)
+            kpos = kv_idx * kv_chunk + jnp.arange(kv_chunk)
+            mask = qpos[:, None] >= kpos[None, :]
+            s = jnp.where(mask[None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        l_new = l * alpha + p.sum(axis=-1)
+        pv = jnp.einsum("bhqs,bshd->bhqd", p.astype(v.dtype), vs,
+                        preferred_element_type=jnp.float32)
+        o_new = o * alpha[..., None] + pv
+        return (o_new, m_new, l_new), None
+
+    o0 = jnp.zeros((B, H, qc, hd), jnp.float32)
+    m0 = jnp.full((B, H, qc), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, H, qc), jnp.float32)
+    (o, m, l), _ = lax.scan(body, (o0, m0, l0), jnp.arange(n_kv))
+    o = o / jnp.maximum(l[..., None], 1e-30)
+    return o  # (B, H, qc, hd)
+
+
+def flash_attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    q_chunk: int = 1024,
+    kv_chunk: int = 1024,
+) -> jnp.ndarray:
+    """q: (B, Sq, H, hd); k, v: (B, Skv, KVH, hd); returns (B, Sq, H, hd).
+
+    Triangular schedule: Q chunks iterate in a static python loop, and each
+    only scans the KV chunks its causal mask can reach.
+    """
+    B, Sq, H, hd = q.shape
+    _, Skv, KVH, _ = k.shape
+    assert H % KVH == 0, "GQA requires n_heads % n_kv_heads == 0"
+    kv_map = jnp.asarray(np.repeat(np.arange(KVH), H // KVH))
+    q_chunk = min(q_chunk, Sq)
+    kv_chunk = min(kv_chunk, Skv)
+    assert Sq % q_chunk == 0 and Skv % kv_chunk == 0
+
+    outs = []
+    n_q = Sq // q_chunk
+    for qi in range(n_q):
+        qpos0 = qi * q_chunk
+        qs = lax.dynamic_slice_in_dim(q, qpos0, q_chunk, axis=1)
+        if causal:
+            n_kv = min((qpos0 + q_chunk + kv_chunk - 1) // kv_chunk, Skv // kv_chunk)
+        else:
+            n_kv = Skv // kv_chunk
+        o = _chunk_attn_scan(qs, k, v, kv_map, qpos0, causal, kv_chunk, n_kv)
+        outs.append(o)
+    o = jnp.concatenate(outs, axis=2) if n_q > 1 else outs[0]  # (B, H, Sq, hd)
+    o = jnp.moveaxis(o, 1, 2)  # (B, Sq, H, hd)
+    return o.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Decode attention (one new token against a KV cache)
+# ---------------------------------------------------------------------------
+
+def decode_attention(
+    q: jnp.ndarray,  # (B, 1, H, hd)
+    k_cache: jnp.ndarray,  # (B, S, KVH, hd)
+    v_cache: jnp.ndarray,
+    cur_len: jnp.ndarray,  # scalar or (B,) — number of valid cache positions
+) -> jnp.ndarray:
+    B, _, H, hd = q.shape
+    _, S, KVH, _ = k_cache.shape
+    G = H // KVH
+    qg = q.reshape(B, 1, KVH, G, hd)
+    s = jnp.einsum("bqhgd,bshd->bhgqs", qg, k_cache,
+                   preferred_element_type=jnp.float32)
+    s = s / jnp.sqrt(hd).astype(jnp.float32)  # (B, KVH, G, 1, S)
+    pos = jnp.arange(S)
+    valid = pos[None] < jnp.broadcast_to(jnp.asarray(cur_len)[..., None], (B, S))
+    s = jnp.where(valid[:, None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqs,bshd->bhgqd", p.astype(v_cache.dtype), v_cache,
+                   preferred_element_type=jnp.float32)
+    o = jnp.moveaxis(o, 3, 1).reshape(B, 1, H, hd)
+    return o.astype(q.dtype)
+
+
+def decode_attention_q8(
+    q: jnp.ndarray,  # (B, 1, H, hd) activation dtype
+    k_q: jnp.ndarray,  # (B, S, KVH, hd) int8
+    k_scale: jnp.ndarray,  # (B, S, KVH) fp32
+    v_q: jnp.ndarray,  # (B, S, KVH, hd) int8
+    v_scale: jnp.ndarray,  # (B, S, KVH) fp32
+    cur_len: jnp.ndarray,
+) -> jnp.ndarray:
+    """Decode attention reading an int8 KV cache.
+
+    Scores run as an int8 x int8 -> int32 dot (the TPU int8 MXU path) with
+    the per-(position, kv-head) K scales and per-query Q scales factored out
+    of the contraction; PV dequantizes V per chunkless read (probs stay fp).
+    The memory-term win is on the K/V reads: 1 byte/elem instead of 2.
+    """
+    B, _, H, hd = q.shape
+    _, S, KVH, _ = k_q.shape
+    G = H // KVH
+    # per-(B, head) symmetric quantization of the single query
+    q32 = q.astype(jnp.float32)
+    q_amax = jnp.max(jnp.abs(q32), axis=-1, keepdims=True)  # (B,1,H,1)
+    q_scale = jnp.maximum(q_amax / 127.0, 1e-8)
+    qq = jnp.clip(jnp.round(q32 / q_scale), -127, 127).astype(jnp.int8)
+    qg = qq.reshape(B, 1, KVH, G, hd)
+    s_int = jnp.einsum(
+        "bqhgd,bshd->bhgqs", qg, k_q, preferred_element_type=jnp.int32
+    )  # int8 x int8 -> int32
+    qs = q_scale.reshape(B, KVH, G)[:, :, :, None, None]  # (B,KVH,G,1,1)
+    ks = k_scale.transpose(0, 2, 1)[:, :, None, None, :]  # (B,KVH,1,1,S)
+    s = s_int.astype(jnp.float32) * qs * ks / jnp.sqrt(hd).astype(jnp.float32)
+    pos = jnp.arange(S)
+    valid = pos[None] < jnp.broadcast_to(jnp.asarray(cur_len)[..., None], (B, S))
+    s = jnp.where(valid[:, None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    # PV: fold the per-position V scales into the probabilities so the
+    # contraction consumes raw int8 V rows (fp32 accumulation)
+    p_scaled = (p * v_scale.transpose(0, 2, 1)[:, :, None, None, :]).astype(
+        jnp.bfloat16
+    )
+    pv = jnp.einsum(
+        "bhgqs,bshd->bhgqd", p_scaled, v_q.astype(jnp.bfloat16),
+        preferred_element_type=jnp.float32,
+    )
+    o = jnp.moveaxis(pv, 3, 1).reshape(B, 1, H, hd)
+    return o.astype(q.dtype)

@@ -1,0 +1,143 @@
+"""Shared model building blocks (pure-JAX pytree style, no flax)."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+
+def dtype_of(name: str):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32, "float16": jnp.float16}[
+        name
+    ]
+
+
+# ---------------------------------------------------------------------------
+# Initializers (all take (key, shape, dtype))
+# ---------------------------------------------------------------------------
+
+def normal_init(key, shape, dtype, stddev=0.02):
+    return (jax.random.normal(key, shape, jnp.float32) * stddev).astype(dtype)
+
+
+def scaled_init(fan_in: int):
+    def init(key, shape, dtype):
+        std = 1.0 / np.sqrt(fan_in)
+        return (jax.random.normal(key, shape, jnp.float32) * std).astype(dtype)
+
+    return init
+
+
+def zeros_init(key, shape, dtype):
+    del key
+    return jnp.zeros(shape, dtype)
+
+
+def ones_init(key, shape, dtype):
+    del key
+    return jnp.ones(shape, dtype)
+
+
+class KeyGen:
+    """Deterministic key splitter for readable init code."""
+
+    def __init__(self, key):
+        self._key = key
+
+    def __call__(self):
+        self._key, sub = jax.random.split(self._key)
+        return sub
+
+
+# ---------------------------------------------------------------------------
+# Norms / activations
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * scale.astype(jnp.float32)).astype(dt)
+
+
+def layernorm(
+    x: jnp.ndarray, scale: jnp.ndarray, bias: jnp.ndarray, eps: float = 1e-5
+) -> jnp.ndarray:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dt)
+
+
+def batchnorm_infer(x, scale, bias, mean, var, eps=1e-5):
+    """Inference-mode batch norm (folded stats)."""
+    inv = jax.lax.rsqrt(var.astype(jnp.float32) + eps)
+    y = (x.astype(jnp.float32) - mean) * inv * scale + bias
+    return y.astype(x.dtype)
+
+
+ACTIVATIONS: Dict[str, Callable] = {
+    "relu": jax.nn.relu,
+    "gelu": jax.nn.gelu,
+    "silu": jax.nn.silu,
+    "sigmoid": jax.nn.sigmoid,
+    "tanh": jnp.tanh,
+    "dice_proxy": jax.nn.sigmoid,  # DIN's Dice ~ data-adaptive PReLU; see recsys.py
+    "identity": lambda x: x,
+}
+
+
+# ---------------------------------------------------------------------------
+# Simple MLP (used by recsys towers and GNN heads)
+# ---------------------------------------------------------------------------
+
+def mlp_init(kg: KeyGen, dims, dtype, bias=True):
+    """dims = [in, h1, h2, ..., out]"""
+    layers = []
+    for i in range(len(dims) - 1):
+        layer = {"w": scaled_init(dims[i])(kg(), (dims[i], dims[i + 1]), dtype)}
+        if bias:
+            layer["b"] = jnp.zeros((dims[i + 1],), dtype)
+        layers.append(layer)
+    return layers
+
+
+def mlp_apply(layers, x, act="relu", final_act="identity"):
+    a = ACTIVATIONS[act]
+    fa = ACTIVATIONS[final_act]
+    for i, layer in enumerate(layers):
+        x = x @ layer["w"]
+        if "b" in layer:
+            x = x + layer["b"]
+        x = a(x) if i < len(layers) - 1 else fa(x)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# Losses
+# ---------------------------------------------------------------------------
+
+def softmax_cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    """Per-example CE; logits (..., V) float, labels (...) int."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    picked = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return lse - picked
+
+
+def binary_cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    logits = logits.astype(jnp.float32)
+    labels = labels.astype(jnp.float32)
+    return jnp.maximum(logits, 0) - logits * labels + jnp.log1p(jnp.exp(-jnp.abs(logits)))
+
+
+def param_count(params) -> int:
+    return sum(int(np.prod(x.shape)) for x in jax.tree_util.tree_leaves(params))

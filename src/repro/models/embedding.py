@@ -1,0 +1,83 @@
+"""Sparse embedding substrate for the recsys family.
+
+JAX has no native EmbeddingBag or CSR sparse — lookups are jnp.take gathers
+and multi-hot bags are take + jax.ops.segment_sum, built here as first-class
+ops (kernel_taxonomy §RecSys).  Two distribution strategies for row-sharded
+tables (selected in dist/sharding.py / hillclimbed in EXPERIMENTS.md §Perf):
+
+  * "gspmd"  — tables annotated row-sharded, gathers left to the SPMD
+               partitioner (baseline).
+  * "psum"   — shard_map manual exchange: every device looks up the ids that
+               hash to its rows and psums partial vectors (classic
+               model-parallel embedding, all-reduce volume = nnz * dim).
+
+The all-to-all (DLRM-style) exchange is implemented in dist/embedding_exchange
+as the §Perf optimized variant.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import KeyGen, normal_init
+
+
+@dataclasses.dataclass(frozen=True)
+class TableSpec:
+    name: str
+    vocab: int
+    dim: int
+
+
+def init_table(key, spec: TableSpec, dtype=jnp.float32):
+    # rows scaled ~ 1/sqrt(dim) as in DLRM
+    return normal_init(key, (spec.vocab, spec.dim), dtype, stddev=1.0 / jnp.sqrt(spec.dim))
+
+
+def embedding_lookup(table: jnp.ndarray, ids: jnp.ndarray) -> jnp.ndarray:
+    """Single-hot lookup: (V, d), (...,) int -> (..., d)."""
+    return jnp.take(table, ids, axis=0)
+
+
+def embedding_bag(
+    table: jnp.ndarray,
+    ids: jnp.ndarray,  # (nnz,) int32
+    segment_ids: jnp.ndarray,  # (nnz,) int32 bag index per id
+    num_bags: int,
+    combiner: str = "sum",
+    weights: Optional[jnp.ndarray] = None,
+) -> jnp.ndarray:
+    """torch.nn.EmbeddingBag equivalent: gather + segment reduce."""
+    v = jnp.take(table, ids, axis=0)  # (nnz, d)
+    if weights is not None:
+        v = v * weights[:, None]
+    if combiner == "sum":
+        return jax.ops.segment_sum(v, segment_ids, num_segments=num_bags)
+    if combiner == "mean":
+        s = jax.ops.segment_sum(v, segment_ids, num_segments=num_bags)
+        c = jax.ops.segment_sum(
+            jnp.ones((ids.shape[0], 1), v.dtype), segment_ids, num_segments=num_bags
+        )
+        return s / jnp.maximum(c, 1.0)
+    if combiner == "max":
+        return jax.ops.segment_max(v, segment_ids, num_segments=num_bags)
+    raise ValueError(f"unknown combiner {combiner}")
+
+
+def hash_bucket(ids: jnp.ndarray, vocab: int) -> jnp.ndarray:
+    """Hash arbitrary ids into table rows (quotient-remainder-free variant)."""
+    x = ids.astype(jnp.uint32)
+    x = (x ^ (x >> 16)) * jnp.uint32(0x45D9F3B)
+    x = (x ^ (x >> 16)) * jnp.uint32(0x45D9F3B)
+    x = x ^ (x >> 16)
+    return (x % jnp.uint32(vocab)).astype(jnp.int32)
+
+
+def masked_mean_pool(emb: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
+    """(B, T, d) x (B, T) -> (B, d)."""
+    m = mask.astype(emb.dtype)[..., None]
+    return (emb * m).sum(axis=1) / jnp.maximum(m.sum(axis=1), 1.0)

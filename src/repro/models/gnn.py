@@ -1,0 +1,182 @@
+"""GatedGCN (Bresson & Laurent; benchmarking-gnns arXiv:2003.00982 config).
+
+Message passing is implemented with the JAX-native sparse idiom:
+edge-index gathers (jnp.take) + jax.ops.segment_sum scatters — JAX has no
+CSR/CSC SpMM, so the gather/segment-reduce pipeline IS the kernel (see
+kernel_taxonomy §GNN).  Works on one flat edge list for all four assigned
+shapes: full-graph, sampled minibatch subgraphs, giant full-batch, and
+block-diagonal batched molecules.
+
+Layer (edge-gated aggregation):
+    e'_ij = e_ij + ReLU(LN(A e_ij + B h_i + C h_j))
+    eta_ij = sigma(e'_ij) / (sum_{j'->i} sigma(e'_ij') + eps)
+    h'_i  = h_i + ReLU(LN(U h_i + sum_{j->i} eta_ij * (V h_j)))
+
+(BatchNorm of the reference impl is replaced by LayerNorm — no running
+batch statistics in a pure-functional pipeline; noted in DESIGN.md.)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.common import (
+    KeyGen,
+    dtype_of,
+    layernorm,
+    mlp_apply,
+    mlp_init,
+    scaled_init,
+    softmax_cross_entropy,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class GNNConfig:
+    name: str
+    n_layers: int = 16
+    d_hidden: int = 70
+    d_feat: int = 1433
+    d_edge_feat: int = 0  # 0 => learned constant edge init
+    n_classes: int = 7
+    readout: str = "node"  # "node" | "graph"
+    graph_target_dim: int = 1  # for graph-level regression
+    dtype: str = "float32"
+    param_dtype: str = "float32"
+    norm_eps: float = 1e-5
+    remat: bool = True
+
+    def param_count(self) -> int:
+        d = self.d_hidden
+        per_layer = 5 * d * d + 5 * d + 4 * d  # A,B,C,U,V + biases + 2 LN
+        head = d * self.n_classes if self.readout == "node" else (
+            d * d + d * self.graph_target_dim
+        )
+        return self.d_feat * d + max(self.d_edge_feat, 1) * d + self.n_layers * per_layer + head
+
+
+def _layer_init(key, cfg: GNNConfig):
+    kg = KeyGen(key)
+    d = cfg.d_hidden
+    pdt = dtype_of(cfg.param_dtype)
+    mats = {
+        name: scaled_init(d)(kg(), (d, d), pdt) for name in ["A", "B", "C", "U", "V"]
+    }
+    mats.update(
+        {
+            "bA": jnp.zeros((d,), pdt),
+            "bU": jnp.zeros((d,), pdt),
+            "ln_h": jnp.ones((d,), pdt),
+            "ln_h_b": jnp.zeros((d,), pdt),
+            "ln_e": jnp.ones((d,), pdt),
+            "ln_e_b": jnp.zeros((d,), pdt),
+        }
+    )
+    return mats
+
+
+def init_params(key, cfg: GNNConfig):
+    kg = KeyGen(key)
+    pdt = dtype_of(cfg.param_dtype)
+    d = cfg.d_hidden
+    layer_keys = jax.random.split(kg(), cfg.n_layers)
+    p = {
+        "node_in": scaled_init(cfg.d_feat)(kg(), (cfg.d_feat, d), pdt),
+        "edge_in": scaled_init(max(cfg.d_edge_feat, 1))(
+            kg(), (max(cfg.d_edge_feat, 1), d), pdt
+        ),
+        "layers": jax.vmap(lambda k: _layer_init(k, cfg))(layer_keys),
+    }
+    if cfg.readout == "node":
+        p["head"] = scaled_init(d)(kg(), (d, cfg.n_classes), pdt)
+    else:
+        p["head_mlp"] = mlp_init(kg, [d, d, cfg.graph_target_dim], pdt)
+    return p
+
+
+def param_shapes(cfg: GNNConfig):
+    return jax.eval_shape(lambda k: init_params(k, cfg), jax.random.key(0))
+
+
+def _gated_layer(h, e, lp, src, dst, n_nodes, eps):
+    """One GatedGCN layer on a flat edge list."""
+    h_src = h[src]  # (E, d) gather
+    h_dst = h[dst]
+    e_new = e + jax.nn.relu(
+        layernorm(e @ lp["A"] + lp["bA"] + h_dst @ lp["B"] + h_src @ lp["C"],
+                  lp["ln_e"], lp["ln_e_b"], eps)
+    )
+    gate = jax.nn.sigmoid(e_new)  # (E, d)
+    msg = gate * (h_src @ lp["V"])  # (E, d)
+    agg = jax.ops.segment_sum(msg, dst, num_segments=n_nodes)
+    denom = jax.ops.segment_sum(gate, dst, num_segments=n_nodes)
+    agg = agg / (denom + 1e-6)
+    h_new = h + jax.nn.relu(
+        layernorm(h @ lp["U"] + lp["bU"] + agg, lp["ln_h"], lp["ln_h_b"], eps)
+    )
+    # keep the activation dtype stable under mixed precision (params may be
+    # fp32 while states run bf16)
+    return h_new.astype(h.dtype), e_new.astype(e.dtype)
+
+
+def backbone(params, cfg: GNNConfig, graph, constrain=lambda x, n: x):
+    """graph = {"nodes": (N, d_feat), "edges": (2, E) int32,
+                "edge_feats": optional (E, d_edge)} -> node states (N, d)."""
+    dt = dtype_of(cfg.dtype)
+    nodes = graph["nodes"].astype(dt)
+    src, dst = graph["edges"][0], graph["edges"][1]
+    n_nodes = nodes.shape[0]
+    h = nodes @ params["node_in"]
+    if cfg.d_edge_feat > 0:
+        e = graph["edge_feats"].astype(dt) @ params["edge_in"]
+    else:
+        e = jnp.broadcast_to(params["edge_in"][0], (src.shape[0], cfg.d_hidden)).astype(dt)
+    h = constrain(h, "nodes")
+    e = constrain(e, "edges")
+
+    def body(carry, lp):
+        h, e = carry
+        h, e = _gated_layer(h, e, lp, src, dst, n_nodes, cfg.norm_eps)
+        return (constrain(h, "nodes"), constrain(e, "edges")), None
+
+    fn = jax.checkpoint(body) if cfg.remat else body
+    (h, e), _ = lax.scan(fn, (h, e), params["layers"])
+    return h
+
+
+def node_logits(params, cfg: GNNConfig, graph, constrain=lambda x, n: x):
+    h = backbone(params, cfg, graph, constrain)
+    return h @ params["head"]
+
+
+def graph_prediction(params, cfg: GNNConfig, graph, n_graphs: int, constrain=lambda x, n: x):
+    """graph additionally holds graph_ids (N,); n_graphs is STATIC (closure
+    it via functools.partial before jit — segment_sum needs a static size)."""
+    h = backbone(params, cfg, graph, constrain)
+    gid = graph["graph_ids"]
+    pooled = jax.ops.segment_sum(h, gid, num_segments=n_graphs)
+    counts = jax.ops.segment_sum(jnp.ones((h.shape[0], 1), h.dtype), gid, n_graphs)
+    pooled = pooled / jnp.maximum(counts, 1.0)
+    return mlp_apply(params["head_mlp"], pooled)
+
+
+def train_loss(params, cfg: GNNConfig, batch, n_graphs: int = 0, constrain=lambda x, n: x):
+    """Node classification (masked CE) or graph regression (MSE).
+
+    For graph readout, pass n_graphs statically (functools.partial) pre-jit.
+    """
+    if cfg.readout == "node":
+        logits = node_logits(params, cfg, batch, constrain)
+        mask = batch.get("label_mask")
+        ce = softmax_cross_entropy(logits, batch["labels"])
+        if mask is not None:
+            return (ce * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+        return ce.mean()
+    pred = graph_prediction(params, cfg, batch, n_graphs, constrain)
+    tgt = batch["graph_targets"].astype(jnp.float32)
+    return jnp.mean(jnp.square(pred.astype(jnp.float32).squeeze(-1) - tgt))

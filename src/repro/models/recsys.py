@@ -1,0 +1,367 @@
+"""RecSys / ranking models: DIN, DIEN, BST, DCN-v2 (assigned configs).
+
+Structure shared by all four: sparse embedding tables (the hot path; see
+models/embedding.py) -> feature interaction (target attention / AUGRU /
+transformer block / cross network) -> small MLP tower -> CTR logit.
+
+Batch layouts (built by data/recsys_data.py, shape-specs by configs/):
+  DIN/DIEN: {"hist_items": (B,T), "hist_cates": (B,T), "hist_mask": (B,T),
+             "target_item": (B,), "target_cate": (B,), "label": (B,)}
+  BST:      same with T=20 (target appended as the 21st sequence position)
+  DCN-v2:   {"dense": (B,13), "sparse": (B,26), "label": (B,)}
+
+``retrieval_scores`` scores ONE user against C candidates (retrieval_cand
+shape) as a batched forward — no loop over candidates.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.common import (
+    KeyGen,
+    binary_cross_entropy,
+    dtype_of,
+    mlp_apply,
+    mlp_init,
+    normal_init,
+    scaled_init,
+)
+from repro.models.embedding import TableSpec, embedding_lookup, init_table
+
+
+# ===========================================================================
+# Configs
+# ===========================================================================
+
+@dataclasses.dataclass(frozen=True)
+class RecSysConfig:
+    name: str
+    kind: str  # "din" | "dien" | "bst" | "dcn"
+    embed_dim: int
+    seq_len: int = 0
+    item_vocab: int = 1_000_000
+    cate_vocab: int = 10_000
+    # DIN
+    attn_mlp: Tuple[int, ...] = (80, 40)
+    mlp: Tuple[int, ...] = (200, 80)
+    # DIEN
+    gru_dim: int = 0
+    # BST
+    n_heads: int = 8
+    n_blocks: int = 1
+    # DCN
+    n_dense: int = 13
+    n_sparse: int = 26
+    n_cross_layers: int = 3
+    sparse_vocabs: Tuple[int, ...] = ()
+    dtype: str = "float32"
+    param_dtype: str = "float32"
+
+    @property
+    def pair_dim(self) -> int:
+        """item+cate embedding concat width for sequence models."""
+        return 2 * self.embed_dim
+
+
+def dcn_default_vocabs(n_sparse: int = 26) -> Tuple[int, ...]:
+    """Criteo-like skewed vocab sizes: a few huge fields, a long small tail."""
+    vocabs = [10_000_000] * 3 + [1_000_000] * 5 + [100_000] * 8 + [10_000] * 10
+    return tuple(vocabs[:n_sparse])
+
+
+# ===========================================================================
+# Shared init pieces
+# ===========================================================================
+
+def _seq_tables(kg: KeyGen, cfg: RecSysConfig, pdt):
+    return {
+        "item_table": init_table(kg(), TableSpec("item", cfg.item_vocab, cfg.embed_dim), pdt),
+        "cate_table": init_table(kg(), TableSpec("cate", cfg.cate_vocab, cfg.embed_dim), pdt),
+    }
+
+
+def _pair_embed(params, items, cates):
+    """(..., ) ids -> (..., 2*embed_dim) concat of item and category."""
+    return jnp.concatenate(
+        [embedding_lookup(params["item_table"], items),
+         embedding_lookup(params["cate_table"], cates)],
+        axis=-1,
+    )
+
+
+# ===========================================================================
+# DIN — Deep Interest Network (target attention over behavior sequence)
+# ===========================================================================
+
+def din_init(key, cfg: RecSysConfig):
+    kg = KeyGen(key)
+    pdt = dtype_of(cfg.param_dtype)
+    d = cfg.pair_dim
+    p = _seq_tables(kg, cfg, pdt)
+    p["attn_mlp"] = mlp_init(kg, [4 * d, *cfg.attn_mlp, 1], pdt)
+    p["tower"] = mlp_init(kg, [3 * d, *cfg.mlp, 1], pdt)
+    return p
+
+
+def _din_attention(params, hist, tgt, mask):
+    """hist (B,T,d), tgt (B,d) -> pooled (B,d). Raw (unnormalized) scores
+    as in the paper; masked positions contribute zero."""
+    B, T, d = hist.shape
+    tgt_b = jnp.broadcast_to(tgt[:, None, :], (B, T, d))
+    feats = jnp.concatenate([hist, tgt_b, hist - tgt_b, hist * tgt_b], axis=-1)
+    scores = mlp_apply(params["attn_mlp"], feats, act="sigmoid")[..., 0]  # (B,T)
+    scores = scores * mask.astype(scores.dtype)
+    return jnp.einsum("bt,btd->bd", scores, hist)
+
+
+def din_logits(params, cfg: RecSysConfig, batch):
+    hist = _pair_embed(params, batch["hist_items"], batch["hist_cates"])
+    tgt = _pair_embed(params, batch["target_item"], batch["target_cate"])
+    pooled = _din_attention(params, hist, tgt, batch["hist_mask"])
+    x = jnp.concatenate([pooled, tgt, pooled * tgt], axis=-1)
+    return mlp_apply(params["tower"], x, act="sigmoid")[..., 0]
+
+
+# ===========================================================================
+# DIEN — interest evolution: GRU + attentional AUGRU over the sequence
+# ===========================================================================
+
+def _gru_init(kg: KeyGen, d_in: int, d_h: int, pdt):
+    return {
+        "wz": scaled_init(d_in + d_h)(kg(), (d_in + d_h, d_h), pdt),
+        "wr": scaled_init(d_in + d_h)(kg(), (d_in + d_h, d_h), pdt),
+        "wh": scaled_init(d_in + d_h)(kg(), (d_in + d_h, d_h), pdt),
+        "bz": jnp.zeros((d_h,), pdt),
+        "br": jnp.zeros((d_h,), pdt),
+        "bh": jnp.zeros((d_h,), pdt),
+    }
+
+
+def _gru_cell(p, h, x, att=None):
+    """Standard GRU; if att (scalar per example) given, AUGRU gate scaling."""
+    xh = jnp.concatenate([x, h], axis=-1)
+    z = jax.nn.sigmoid(xh @ p["wz"] + p["bz"])
+    r = jax.nn.sigmoid(xh @ p["wr"] + p["br"])
+    xrh = jnp.concatenate([x, r * h], axis=-1)
+    cand = jnp.tanh(xrh @ p["wh"] + p["bh"])
+    if att is not None:
+        z = z * att[:, None]  # AUGRU: attention modulates the update gate
+    return (1.0 - z) * h + z * cand
+
+
+def dien_init(key, cfg: RecSysConfig):
+    kg = KeyGen(key)
+    pdt = dtype_of(cfg.param_dtype)
+    d, dh = cfg.pair_dim, cfg.gru_dim
+    p = _seq_tables(kg, cfg, pdt)
+    p["gru1"] = _gru_init(kg, d, dh, pdt)
+    p["gru2"] = _gru_init(kg, dh, dh, pdt)
+    p["att_w"] = scaled_init(dh)(kg(), (dh, d), pdt)  # bilinear attention
+    p["tower"] = mlp_init(kg, [d + dh, *cfg.mlp, 1], pdt)
+    return p
+
+
+def dien_logits(params, cfg: RecSysConfig, batch):
+    hist = _pair_embed(params, batch["hist_items"], batch["hist_cates"])  # (B,T,d)
+    tgt = _pair_embed(params, batch["target_item"], batch["target_cate"])  # (B,d)
+    mask = batch["hist_mask"].astype(hist.dtype)
+    B, T, d = hist.shape
+    dh = cfg.gru_dim
+
+    # interest extraction GRU
+    def step1(h, xt):
+        x, mk = xt
+        h_new = _gru_cell(params["gru1"], h, x)
+        h = jnp.where(mk[:, None] > 0, h_new, h)
+        return h, h
+
+    h0 = jnp.zeros((B, dh), hist.dtype)
+    _, states = lax.scan(step1, h0, (hist.swapaxes(0, 1), mask.swapaxes(0, 1)))
+    states = states.swapaxes(0, 1)  # (B, T, dh)
+
+    # attention of each interest state w.r.t. the target (bilinear + softmax)
+    att_logits = jnp.einsum("bth,hd,bd->bt", states, params["att_w"], tgt)
+    att_logits = jnp.where(mask > 0, att_logits, -1e30)
+    att = jax.nn.softmax(att_logits, axis=-1)  # (B, T)
+
+    # interest evolution AUGRU
+    def step2(h, xt):
+        s, a, mk = xt
+        h_new = _gru_cell(params["gru2"], h, s, att=a)
+        h = jnp.where(mk[:, None] > 0, h_new, h)
+        return h, None
+
+    h0 = jnp.zeros((B, dh), hist.dtype)
+    h_final, _ = lax.scan(
+        step2, h0, (states.swapaxes(0, 1), att.swapaxes(0, 1), mask.swapaxes(0, 1))
+    )
+    x = jnp.concatenate([tgt, h_final], axis=-1)
+    return mlp_apply(params["tower"], x, act="sigmoid")[..., 0]
+
+
+# ===========================================================================
+# BST — Behavior Sequence Transformer
+# ===========================================================================
+
+def bst_init(key, cfg: RecSysConfig):
+    kg = KeyGen(key)
+    pdt = dtype_of(cfg.param_dtype)
+    d = cfg.pair_dim  # transformer width = item+cate embed
+    p = _seq_tables(kg, cfg, pdt)
+    p["pos_table"] = normal_init(kg(), (cfg.seq_len + 1, d), pdt)
+    blocks = []
+    for _ in range(cfg.n_blocks):
+        blocks.append(
+            {
+                "wq": scaled_init(d)(kg(), (d, d), pdt),
+                "wk": scaled_init(d)(kg(), (d, d), pdt),
+                "wv": scaled_init(d)(kg(), (d, d), pdt),
+                "wo": scaled_init(d)(kg(), (d, d), pdt),
+                "ln1": jnp.ones((d,), pdt),
+                "ln1_b": jnp.zeros((d,), pdt),
+                "ln2": jnp.ones((d,), pdt),
+                "ln2_b": jnp.zeros((d,), pdt),
+                "ff1": scaled_init(d)(kg(), (d, 4 * d), pdt),
+                "ff2": scaled_init(4 * d)(kg(), (4 * d, d), pdt),
+            }
+        )
+    p["blocks"] = blocks
+    p["tower"] = mlp_init(kg, [(cfg.seq_len + 1) * d, *cfg.mlp, 1], pdt)
+    return p
+
+
+def _bst_block(blk, x, mask, n_heads, eps=1e-5):
+    from repro.models.common import layernorm
+
+    B, T, d = x.shape
+    hd = d // n_heads
+    xa = layernorm(x, blk["ln1"], blk["ln1_b"], eps)
+    q = (xa @ blk["wq"]).reshape(B, T, n_heads, hd)
+    k = (xa @ blk["wk"]).reshape(B, T, n_heads, hd)
+    v = (xa @ blk["wv"]).reshape(B, T, n_heads, hd)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, k) / np.sqrt(hd)
+    s = jnp.where(mask[:, None, None, :] > 0, s, -1e30)
+    a = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhqk,bkhd->bqhd", a, v).reshape(B, T, d)
+    x = x + o @ blk["wo"]
+    xf = layernorm(x, blk["ln2"], blk["ln2_b"], eps)
+    x = x + jax.nn.relu(xf @ blk["ff1"]) @ blk["ff2"]
+    return x
+
+
+def bst_logits(params, cfg: RecSysConfig, batch):
+    hist = _pair_embed(params, batch["hist_items"], batch["hist_cates"])  # (B,T,d)
+    tgt = _pair_embed(params, batch["target_item"], batch["target_cate"])  # (B,d)
+    seq = jnp.concatenate([hist, tgt[:, None, :]], axis=1)  # target appended
+    B, T1, d = seq.shape
+    seq = seq + params["pos_table"][None, :T1, :]
+    mask = jnp.concatenate(
+        [batch["hist_mask"], jnp.ones((B, 1), batch["hist_mask"].dtype)], axis=1
+    )
+    x = seq
+    for blk in params["blocks"]:
+        x = _bst_block(blk, x, mask, cfg.n_heads)
+    x = (x * mask[..., None].astype(x.dtype)).reshape(B, T1 * d)
+    return mlp_apply(params["tower"], x, act="relu")[..., 0]
+
+
+# ===========================================================================
+# DCN-v2 — deep & cross network (full-rank cross layers, stacked)
+# ===========================================================================
+
+def dcn_init(key, cfg: RecSysConfig):
+    kg = KeyGen(key)
+    pdt = dtype_of(cfg.param_dtype)
+    vocabs = cfg.sparse_vocabs or dcn_default_vocabs(cfg.n_sparse)
+    tables = [
+        init_table(kg(), TableSpec(f"f{i}", v, cfg.embed_dim), pdt)
+        for i, v in enumerate(vocabs)
+    ]
+    x0_dim = cfg.n_dense + cfg.n_sparse * cfg.embed_dim
+    cross = []
+    for _ in range(cfg.n_cross_layers):
+        cross.append(
+            {
+                "w": scaled_init(x0_dim)(kg(), (x0_dim, x0_dim), pdt),
+                "b": jnp.zeros((x0_dim,), pdt),
+            }
+        )
+    return {
+        "tables": tables,
+        "cross": cross,
+        "tower": mlp_init(kg, [x0_dim, *cfg.mlp, 1], pdt),
+    }
+
+
+def dcn_logits(params, cfg: RecSysConfig, batch):
+    dense = batch["dense"].astype(dtype_of(cfg.dtype))  # (B, 13)
+    sparse = batch["sparse"]  # (B, 26) int32
+    embs = [
+        embedding_lookup(tab, sparse[:, i]) for i, tab in enumerate(params["tables"])
+    ]  # 26 x (B, d)
+    x0 = jnp.concatenate([dense] + embs, axis=-1)  # (B, 429)
+    x = x0
+    for layer in params["cross"]:
+        x = x0 * (x @ layer["w"] + layer["b"]) + x  # DCN-v2 cross
+    return mlp_apply(params["tower"], x, act="relu")[..., 0]
+
+
+# ===========================================================================
+# Dispatch + losses + retrieval
+# ===========================================================================
+
+_INITS = {"din": din_init, "dien": dien_init, "bst": bst_init, "dcn": dcn_init}
+_LOGITS = {"din": din_logits, "dien": dien_logits, "bst": bst_logits, "dcn": dcn_logits}
+
+
+def init_params(key, cfg: RecSysConfig):
+    return _INITS[cfg.kind](key, cfg)
+
+
+def param_shapes(cfg: RecSysConfig):
+    return jax.eval_shape(lambda k: init_params(k, cfg), jax.random.key(0))
+
+
+def logits(params, cfg: RecSysConfig, batch):
+    return _LOGITS[cfg.kind](params, cfg, batch)
+
+
+def train_loss(params, cfg: RecSysConfig, batch):
+    lg = logits(params, cfg, batch)
+    return binary_cross_entropy(lg, batch["label"]).mean()
+
+
+def serve_scores(params, cfg: RecSysConfig, batch):
+    return jax.nn.sigmoid(logits(params, cfg, batch))
+
+
+def retrieval_scores(params, cfg: RecSysConfig, user_batch, candidates):
+    """Score ONE user against C candidate items as a single batched forward.
+
+    user_batch: the sequence-model fields with B=1 (or dense/sparse for dcn).
+    candidates: (C,) item ids (sequence models) or (C, n_sparse) rows (dcn).
+    """
+    C = candidates.shape[0]
+    if cfg.kind == "dcn":
+        batch = {
+            "dense": jnp.broadcast_to(user_batch["dense"], (C, cfg.n_dense)),
+            "sparse": candidates,
+        }
+        return serve_scores(params, cfg, batch)
+    T = cfg.seq_len
+    batch = {
+        "hist_items": jnp.broadcast_to(user_batch["hist_items"], (C, T)),
+        "hist_cates": jnp.broadcast_to(user_batch["hist_cates"], (C, T)),
+        "hist_mask": jnp.broadcast_to(user_batch["hist_mask"], (C, T)),
+        "target_item": candidates,
+        "target_cate": candidates % cfg.cate_vocab,
+    }
+    return serve_scores(params, cfg, batch)

@@ -1,0 +1,395 @@
+"""LM-family transformer: llama-style blocks with GQA + RoPE + RMSNorm,
+optional MoE FFN (phi3.5-moe, grok-1), scan-over-layers with remat.
+
+Three entry points, one per assigned LM shape kind:
+  * ``train_loss``    — (B, S) tokens -> scalar CE loss      (train_4k)
+  * ``prefill``       — (B, S) tokens -> last logits + KV cache (prefill_32k)
+  * ``decode_step``   — one token + KV cache -> logits + cache  (decode_32k,
+                        long_500k; linear in S, flash-decoding shards S)
+
+Layers are stacked along axis 0 and scanned (jax.lax.scan) so HLO size is
+independent of depth; each block is rematerialized (jax.checkpoint) so peak
+activation memory is one layer deep.  Activation sharding constraints are
+injected via a `constrain(x, name)` callback supplied by dist/sharding.py.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.attention import (apply_rope, decode_attention,
+                                     decode_attention_q8, flash_attention)
+from repro.models.common import KeyGen, dtype_of, normal_init, rmsnorm, scaled_init
+from repro.models.moe import MoEConfig, moe_ffn, moe_params_init
+
+
+@dataclasses.dataclass(frozen=True)
+class LMConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    moe_experts: int = 0  # 0 => dense FFN
+    moe_top_k: int = 2
+    rope_theta: float = 10_000.0
+    norm_eps: float = 1e-5
+    dtype: str = "bfloat16"
+    param_dtype: str = "bfloat16"
+    q_chunk: int = 1024
+    kv_chunk: int = 1024
+    ce_chunk: int = 512
+    moe_group: int = 4096
+    aux_loss_coef: float = 0.01
+    remat: bool = True
+    tie_embeddings: bool = False
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.n_heads
+
+    @property
+    def is_moe(self) -> bool:
+        return self.moe_experts > 0
+
+    @property
+    def moe_cfg(self) -> MoEConfig:
+        return MoEConfig(
+            num_experts=self.moe_experts,
+            top_k=self.moe_top_k,
+            group_size=self.moe_group,
+        )
+
+    def param_count(self) -> int:
+        """Analytic parameter count (embedding + blocks + head)."""
+        d, f, V = self.d_model, self.d_ff, self.vocab
+        hd = self.head_dim
+        attn = d * self.n_heads * hd + 2 * d * self.n_kv_heads * hd + self.n_heads * hd * d
+        if self.is_moe:
+            ffn = self.moe_experts * 3 * d * f + d * self.moe_experts
+        else:
+            ffn = 3 * d * f
+        per_layer = attn + ffn + 2 * d
+        emb = V * d if self.tie_embeddings else V * d * 2
+        return emb + self.n_layers * per_layer + d
+
+    def active_param_count(self) -> int:
+        """Params touched per token (MoE: top_k experts only)."""
+        if not self.is_moe:
+            return self.param_count()
+        d, f, V = self.d_model, self.d_ff, self.vocab
+        hd = self.head_dim
+        attn = d * self.n_heads * hd + 2 * d * self.n_kv_heads * hd + self.n_heads * hd * d
+        ffn = self.moe_top_k * 3 * d * f + d * self.moe_experts
+        per_layer = attn + ffn + 2 * d
+        emb = V * d if self.tie_embeddings else V * d * 2
+        return emb + self.n_layers * per_layer + d
+
+
+# ---------------------------------------------------------------------------
+# Parameter init
+# ---------------------------------------------------------------------------
+
+def _layer_init(key, cfg: LMConfig):
+    kg = KeyGen(key)
+    d, hd = cfg.d_model, cfg.head_dim
+    pdt = dtype_of(cfg.param_dtype)
+    p = {
+        "ln1": jnp.ones((d,), pdt),
+        "ln2": jnp.ones((d,), pdt),
+        "wq": scaled_init(d)(kg(), (d, cfg.n_heads * hd), pdt),
+        "wk": scaled_init(d)(kg(), (d, cfg.n_kv_heads * hd), pdt),
+        "wv": scaled_init(d)(kg(), (d, cfg.n_kv_heads * hd), pdt),
+        "wo": scaled_init(cfg.n_heads * hd)(kg(), (cfg.n_heads * hd, d), pdt),
+    }
+    if cfg.is_moe:
+        p["moe"] = moe_params_init(kg, d, cfg.d_ff, cfg.moe_cfg, pdt)
+    else:
+        p["mlp"] = {
+            "w1": scaled_init(d)(kg(), (d, cfg.d_ff), pdt),
+            "w3": scaled_init(d)(kg(), (d, cfg.d_ff), pdt),
+            "w2": scaled_init(cfg.d_ff)(kg(), (cfg.d_ff, d), pdt),
+        }
+    return p
+
+
+def init_params(key, cfg: LMConfig):
+    kg = KeyGen(key)
+    pdt = dtype_of(cfg.param_dtype)
+    layer_keys = jax.random.split(kg(), cfg.n_layers)
+    layers = jax.vmap(lambda k: _layer_init(k, cfg))(layer_keys)
+    p = {
+        "embed": normal_init(kg(), (cfg.vocab, cfg.d_model), pdt),
+        "layers": layers,
+        "ln_f": jnp.ones((cfg.d_model,), pdt),
+    }
+    if not cfg.tie_embeddings:
+        p["unembed"] = normal_init(kg(), (cfg.d_model, cfg.vocab), pdt)
+    return p
+
+
+def unembed_matrix(params, cfg: LMConfig):
+    return params["embed"].T if cfg.tie_embeddings else params["unembed"]
+
+
+def param_shapes(cfg: LMConfig):
+    return jax.eval_shape(lambda k: init_params(k, cfg), jax.random.key(0))
+
+
+# ---------------------------------------------------------------------------
+# Blocks
+# ---------------------------------------------------------------------------
+
+def _no_constrain(x, name):
+    del name
+    return x
+
+
+def _attn_block(h, lp, cfg: LMConfig, positions, constrain):
+    B, S, d = h.shape
+    hd = cfg.head_dim
+    x = rmsnorm(h, lp["ln1"], cfg.norm_eps)
+    q = (x @ lp["wq"]).reshape(B, S, cfg.n_heads, hd)
+    k = (x @ lp["wk"]).reshape(B, S, cfg.n_kv_heads, hd)
+    v = (x @ lp["wv"]).reshape(B, S, cfg.n_kv_heads, hd)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    q = constrain(q, "qkv")
+    # gather K/V across the sequence shards ONCE per layer: the kv-chunk
+    # scan dynamic-slices the length dim, and slicing a sharded dim forces
+    # an all-gather PER CHUNK otherwise (§Perf iteration 1)
+    k = constrain(k, "kv_attn")
+    v = constrain(v, "kv_attn")
+    o = flash_attention(
+        q, k, v, causal=True, q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk
+    )
+    return h + (o.reshape(B, S, -1) @ lp["wo"]), (k, v)
+
+
+def _ffn_block(h, lp, cfg: LMConfig, constrain):
+    B, S, d = h.shape
+    x = rmsnorm(h, lp["ln2"], cfg.norm_eps)
+    if cfg.is_moe:
+        x = constrain(x, "moe_in")  # gather seq: MoE groups are token-batched
+        y, aux = moe_ffn(x.reshape(B * S, d), lp["moe"], cfg.moe_cfg)
+        y = y.reshape(B, S, d)
+    else:
+        hmid = jax.nn.silu(x @ lp["mlp"]["w1"]) * (x @ lp["mlp"]["w3"])
+        hmid = constrain(hmid, "ffn_hidden")
+        y = hmid @ lp["mlp"]["w2"]
+        aux = jnp.zeros((), jnp.float32)
+    return h + y, aux
+
+
+def _block(h, lp, cfg: LMConfig, positions, constrain):
+    h, _ = _attn_block(h, lp, cfg, positions, constrain)
+    h, aux = _ffn_block(h, lp, cfg, constrain)
+    h = constrain(h, "residual")
+    return h, aux
+
+
+# ---------------------------------------------------------------------------
+# Forward passes
+# ---------------------------------------------------------------------------
+
+def backbone(params, cfg: LMConfig, tokens, constrain=_no_constrain):
+    """(B, S) int32 -> final hidden states (B, S, d)."""
+    dt = dtype_of(cfg.dtype)
+    h = params["embed"][tokens].astype(dt)
+    h = constrain(h, "residual")
+    S = tokens.shape[1]
+    positions = jnp.arange(S)
+
+    def body(h, lp):
+        return _block(h, lp, cfg, positions, constrain)
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    h, auxs = lax.scan(body, h, params["layers"])
+    h = rmsnorm(h, params["ln_f"], cfg.norm_eps)
+    return h, auxs.mean()
+
+
+def chunked_ce_loss(h, unembed, targets, chunk: int, constrain=_no_constrain):
+    """Cross-entropy without materializing (B, S, V) logits at once."""
+    B, S, d = h.shape
+    chunk = min(chunk, S)
+    assert S % chunk == 0
+    nc = S // chunk
+    hc = h.reshape(B, nc, chunk, d).swapaxes(0, 1)  # (nc, B, c, d)
+    tc = targets.reshape(B, nc, chunk).swapaxes(0, 1)
+
+    def body(tot, inp):
+        hh, tt = inp
+        logits = (hh @ unembed).astype(jnp.float32)  # (B, c, V)
+        logits = constrain(logits, "logits")
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        # picked logit via mask+sum: shards cleanly over a vocab-sharded
+        # logits tensor (take_along_axis forces an involuntary full
+        # rematerialization under GSPMD — §Perf iteration 2)
+        V = logits.shape[-1]
+        vmask = jax.lax.broadcasted_iota(jnp.int32, logits.shape, 2) == tt[..., None]
+        picked = jnp.sum(jnp.where(vmask, logits, 0.0), axis=-1)
+        return tot + (lse - picked).sum(), None
+
+    tot, _ = lax.scan(body, jnp.zeros((), jnp.float32), (hc, tc))
+    return tot / (B * S)
+
+
+def train_loss(params, cfg: LMConfig, batch, constrain=_no_constrain):
+    """batch = {"tokens": (B, S), "targets": (B, S)} -> scalar loss."""
+    h, aux = backbone(params, cfg, batch["tokens"], constrain)
+    loss = chunked_ce_loss(h, unembed_matrix(params, cfg), batch["targets"], cfg.ce_chunk, constrain)
+    return loss + cfg.aux_loss_coef * aux
+
+
+def prefill(params, cfg: LMConfig, tokens, constrain=_no_constrain):
+    """(B, S) -> (last-token logits (B, V), kcache, vcache (L, B, S, KV, hd))."""
+    dt = dtype_of(cfg.dtype)
+    h = params["embed"][tokens].astype(dt)
+    h = constrain(h, "residual")
+    S = tokens.shape[1]
+    positions = jnp.arange(S)
+
+    def body(h, lp):
+        h, (k, v) = _attn_block(h, lp, cfg, positions, constrain)
+        h, _ = _ffn_block(h, lp, cfg, constrain)
+        h = constrain(h, "residual")
+        return h, (constrain(k, "kv_cache"), constrain(v, "kv_cache"))
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    h, (kc, vc) = lax.scan(body, h, params["layers"])
+    h = rmsnorm(h, params["ln_f"], cfg.norm_eps)
+    logits = (h[:, -1, :] @ unembed_matrix(params, cfg)).astype(jnp.float32)
+    return logits, kc, vc
+
+
+def decode_step(params, cfg: LMConfig, token, pos, kcache, vcache, constrain=_no_constrain):
+    """One decoding step.
+
+    token:  (B, 1) int32 — the newest token.
+    pos:    scalar int32 — its position (cache has `pos` valid entries).
+    kcache/vcache: (L, B, S_max, KV, hd).
+    Returns (logits (B, V), new kcache, new vcache).
+    """
+    dt = dtype_of(cfg.dtype)
+    B = token.shape[0]
+    hd = cfg.head_dim
+    h = params["embed"][token].astype(dt)  # (B, 1, d)
+    positions = jnp.full((B, 1), pos, jnp.int32)
+
+    def body(h, xs):
+        lp, kc, vc = xs
+        x = rmsnorm(h, lp["ln1"], cfg.norm_eps)
+        q = (x @ lp["wq"]).reshape(B, 1, cfg.n_heads, hd)
+        k = (x @ lp["wk"]).reshape(B, 1, cfg.n_kv_heads, hd)
+        v = (x @ lp["wv"]).reshape(B, 1, cfg.n_kv_heads, hd)
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+        kc = lax.dynamic_update_slice_in_dim(kc, k.astype(kc.dtype), pos, axis=1)
+        vc = lax.dynamic_update_slice_in_dim(vc, v.astype(vc.dtype), pos, axis=1)
+        kc = constrain(kc, "kv_cache_l")
+        vc = constrain(vc, "kv_cache_l")
+        o = decode_attention(q, kc, vc, pos + 1)
+        h = h + (o.reshape(B, 1, -1) @ lp["wo"])
+        h, _ = _ffn_block(h, lp, cfg, constrain)
+        return h, (kc, vc)
+
+    h, (kc, vc) = lax.scan(body, h, (params["layers"], kcache, vcache))
+    h = rmsnorm(h, params["ln_f"], cfg.norm_eps)
+    logits = (h[:, 0, :] @ unembed_matrix(params, cfg)).astype(jnp.float32)
+    return logits, kc, vc
+
+
+def make_cache(cfg: LMConfig, batch: int, max_len: int, dtype=None):
+    dt = dtype or dtype_of(cfg.dtype)
+    shape = (cfg.n_layers, batch, max_len, cfg.n_kv_heads, cfg.head_dim)
+    return jnp.zeros(shape, dt), jnp.zeros(shape, dt)
+
+
+# ---------------------------------------------------------------------------
+# int8-quantized KV cache (long-context decode is KV-read memory-bound —
+# EXPERIMENTS.md §Roofline; per-(position, kv-head) scales, ~1.94x smaller)
+# ---------------------------------------------------------------------------
+
+def quantize_kv(x: jnp.ndarray):
+    """x (..., hd) -> (int8 values, fp32 scale over the last dim)."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1)
+    scale = jnp.maximum(amax / 127.0, 1e-8)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]), -127, 127)
+    return q.astype(jnp.int8), scale
+
+
+def dequantize_kv(q: jnp.ndarray, scale: jnp.ndarray, dtype) -> jnp.ndarray:
+    return (q.astype(jnp.float32) * scale[..., None]).astype(dtype)
+
+
+def make_cache_q8(cfg: LMConfig, batch: int, max_len: int):
+    shape = (cfg.n_layers, batch, max_len, cfg.n_kv_heads, cfg.head_dim)
+    sshape = shape[:-1]
+    zero = lambda: {"q": jnp.zeros(shape, jnp.int8),
+                    "scale": jnp.zeros(sshape, jnp.float32)}
+    return zero(), zero()
+
+
+def quantize_cache(kc: jnp.ndarray, vc: jnp.ndarray):
+    kq, ks = quantize_kv(kc)
+    vq, vs = quantize_kv(vc)
+    return {"q": kq, "scale": ks}, {"q": vq, "scale": vs}
+
+
+def decode_step_q8(params, cfg: LMConfig, token, pos, kcache, vcache,
+                   constrain=_no_constrain):
+    """decode_step with int8 KV caches: cache dicts {"q": int8, "scale": f32}.
+
+    New K/V entries are quantized before insertion; attention dequantizes on
+    read (per-position scales — KIVI/KVQuant-style, per-token granularity).
+    """
+    dt = dtype_of(cfg.dtype)
+    B = token.shape[0]
+    hd = cfg.head_dim
+    h = params["embed"][token].astype(dt)
+    positions = jnp.full((B, 1), pos, jnp.int32)
+
+    def body(h, xs):
+        lp, kc, vc = xs
+        x = rmsnorm(h, lp["ln1"], cfg.norm_eps)
+        q = (x @ lp["wq"]).reshape(B, 1, cfg.n_heads, hd)
+        k = (x @ lp["wk"]).reshape(B, 1, cfg.n_kv_heads, hd)
+        v = (x @ lp["wv"]).reshape(B, 1, cfg.n_kv_heads, hd)
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+        kq, ks = quantize_kv(k)
+        vq, vs = quantize_kv(v)
+        kc = {
+            "q": lax.dynamic_update_slice_in_dim(kc["q"], kq, pos, axis=1),
+            "scale": lax.dynamic_update_slice_in_dim(kc["scale"], ks, pos, axis=1),
+        }
+        vc = {
+            "q": lax.dynamic_update_slice_in_dim(vc["q"], vq, pos, axis=1),
+            "scale": lax.dynamic_update_slice_in_dim(vc["scale"], vs, pos, axis=1),
+        }
+        kc = {"q": constrain(kc["q"], "kv_cache_l"),
+              "scale": constrain(kc["scale"], "kv_cache_scale")}
+        vc = {"q": constrain(vc["q"], "kv_cache_l"),
+              "scale": constrain(vc["scale"], "kv_cache_scale")}
+        o = decode_attention_q8(
+            q, kc["q"], kc["scale"], vc["q"], vc["scale"], pos + 1
+        )
+        h = h + (o.reshape(B, 1, -1) @ lp["wo"])
+        h, _ = _ffn_block(h, lp, cfg, constrain)
+        return h, (kc, vc)
+
+    h, (kc, vc) = lax.scan(body, h, (params["layers"], kcache, vcache))
+    h = rmsnorm(h, params["ln_f"], cfg.norm_eps)
+    logits = (h[:, 0, :] @ unembed_matrix(params, cfg)).astype(jnp.float32)
+    return logits, kc, vc

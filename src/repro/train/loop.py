@@ -1,0 +1,118 @@
+"""Training loop: jit'd step with sharding, gradient accumulation,
+checkpoint/restart, straggler watchdog, metrics logging.
+
+Family-agnostic: pass any (loss_fn, params) pair; the LM example drivers in
+examples/ use it with the byte-level pipeline.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from pathlib import Path
+from typing import Callable, Iterable, Optional
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.fault_tolerance import InjectedFault, StepWatchdog
+from repro.train import checkpoint as ckpt
+from repro.train.optimizer import AdamWConfig, adamw_init, adamw_update
+
+
+@dataclasses.dataclass
+class TrainConfig:
+    steps: int = 100
+    log_every: int = 10
+    ckpt_every: int = 50
+    ckpt_dir: Optional[str] = None
+    keep_ckpts: int = 3
+    grad_accum: int = 1
+    async_checkpoint: bool = True
+    opt: AdamWConfig = dataclasses.field(default_factory=AdamWConfig)
+
+
+def make_train_step(loss_fn: Callable, opt_cfg: AdamWConfig, grad_accum: int = 1):
+    """loss_fn(params, batch) -> scalar.  grad_accum > 1 scans microbatches
+    (batch's leading dim must be divisible; accumulates in fp32)."""
+
+    def step(params, opt_state, batch):
+        if grad_accum == 1:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        else:
+            def micro(i, b):
+                return jax.tree_util.tree_map(
+                    lambda x: x.reshape(grad_accum, -1, *x.shape[1:])[i], b
+                )
+
+            def body(carry, i):
+                acc, ls = carry
+                l, g = jax.value_and_grad(loss_fn)(params, micro(i, batch))
+                acc = jax.tree_util.tree_map(
+                    lambda a, gg: a + gg.astype(jnp.float32), acc, g
+                )
+                return (acc, ls + l), None
+
+            zeros = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params
+            )
+            (grads, loss), _ = jax.lax.scan(
+                body, (zeros, jnp.zeros((), jnp.float32)), jnp.arange(grad_accum)
+            )
+            grads = jax.tree_util.tree_map(lambda g: g / grad_accum, grads)
+            loss = loss / grad_accum
+        new_p, new_s, metrics = adamw_update(grads, opt_state, params, opt_cfg)
+        metrics["loss"] = loss
+        return new_p, new_s, metrics
+
+    return step
+
+
+def train(
+    loss_fn: Callable,
+    init_params,
+    data: Iterable,
+    cfg: TrainConfig,
+    *,
+    watchdog: Optional[StepWatchdog] = None,
+    fault_at_step: Optional[int] = None,
+    log: Callable[[str], None] = print,
+):
+    """Returns (params, opt_state, history).  Resumes from cfg.ckpt_dir if a
+    checkpoint exists; `fault_at_step` injects a crash (restart tests)."""
+    params = init_params
+    opt_state = adamw_init(params)
+    start = 0
+    if cfg.ckpt_dir and ckpt.latest_step(cfg.ckpt_dir) is not None:
+        (params, opt_state), start = ckpt.restore((params, opt_state), cfg.ckpt_dir)
+        log(f"resumed from step {start}")
+
+    step_fn = jax.jit(make_train_step(loss_fn, cfg.opt, cfg.grad_accum))
+    history = []
+    data_it = iter(data)
+    for step in range(start, cfg.steps):
+        if watchdog:
+            watchdog.start_step(step)
+        batch = next(data_it)
+        batch = jax.tree_util.tree_map(jnp.asarray, batch)
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        if fault_at_step is not None and step == fault_at_step:
+            raise InjectedFault(f"injected node failure at step {step}")
+        if watchdog:
+            action = watchdog.end_step()
+            if action == "checkpoint" and cfg.ckpt_dir:
+                ckpt.save((params, opt_state), cfg.ckpt_dir, step + 1,
+                          keep=cfg.keep_ckpts)
+        loss = float(metrics["loss"])
+        history.append(loss)
+        if step % cfg.log_every == 0:
+            log(f"step {step}: loss={loss:.4f} gnorm={float(metrics['grad_norm']):.3f}")
+        if cfg.ckpt_dir and (step + 1) % cfg.ckpt_every == 0:
+            ckpt.save((params, opt_state), cfg.ckpt_dir, step + 1,
+                      keep=cfg.keep_ckpts, async_=cfg.async_checkpoint)
+    if cfg.ckpt_dir:
+        t = ckpt.save((params, opt_state), cfg.ckpt_dir, cfg.steps,
+                      keep=cfg.keep_ckpts)
+    return params, opt_state, history

@@ -1,0 +1,114 @@
+"""Correctness of the pure-JAX EPSM algorithms against the scalar oracle."""
+
+import numpy as np
+import pytest
+
+from repro.core import baselines, epsm
+
+from conftest import extract_pattern, make_text
+
+ALGOS = ["epsma", "epsmb", "epsmc", "auto"]
+LENGTHS = [1, 2, 3, 4, 5, 7, 8, 12, 15, 16, 17, 20, 24, 31, 32]
+
+
+def _min_m(algo):
+    # epsmb/epsmc fall back to the lighter algorithm below their regime, so
+    # every algo accepts every m; regimes are exercised by the sweep.
+    return 1
+
+
+@pytest.mark.parametrize("sigma", [2, 4, 20, 256])
+@pytest.mark.parametrize("algo", ALGOS)
+def test_matches_oracle(rng, sigma, algo):
+    n = 3000
+    t = make_text(rng, n, sigma)
+    for m in LENGTHS:
+        # extracted pattern (guaranteed occurrences) and random pattern
+        for p in (extract_pattern(rng, t, m), make_text(rng, m, sigma)):
+            oracle = baselines.naive_np(t, p)
+            got = np.asarray(epsm.find(t, p, algo=algo))
+            assert got.dtype == np.bool_
+            np.testing.assert_array_equal(got, oracle, err_msg=f"m={m}")
+
+
+def test_overlapping_occurrences(rng):
+    # periodic pattern => overlapping matches must all be reported
+    t = np.tile(np.array([1, 2], dtype=np.uint8), 50)
+    for m in [2, 4, 6, 16, 20]:
+        p = np.tile(np.array([1, 2], dtype=np.uint8), m // 2)
+        oracle = baselines.naive_np(t, p)
+        for algo in ALGOS:
+            np.testing.assert_array_equal(
+                np.asarray(epsm.find(t, p, algo=algo)), oracle
+            )
+
+
+def test_all_equal_bytes():
+    t = np.zeros(257, dtype=np.uint8)
+    for m in [1, 3, 5, 16, 32]:
+        p = np.zeros(m, dtype=np.uint8)
+        got = np.asarray(epsm.find(t, p))
+        oracle = baselines.naive_np(t, p)
+        np.testing.assert_array_equal(got, oracle)
+        assert got.sum() == len(t) - m + 1
+
+
+def test_short_text_and_edge_sizes(rng):
+    for n in [0, 1, 2, 5, 16, 17]:
+        t = make_text(rng, n, 4) if n else np.zeros(0, dtype=np.uint8)
+        for m in [1, 2, 4, 16, 32]:
+            p = make_text(rng, m, 4)
+            got = np.asarray(epsm.find(t, p))
+            oracle = baselines.naive_np(t, p)
+            np.testing.assert_array_equal(got, oracle)
+
+
+def test_match_at_boundaries(rng):
+    t = make_text(rng, 1000, 4)
+    for m in [2, 8, 17, 32]:
+        for s in (0, len(t) - m):  # occurrence at the very start and very end
+            p = t[s : s + m].copy()
+            got = np.asarray(epsm.find(t, p))
+            assert got[s]
+            np.testing.assert_array_equal(got, baselines.naive_np(t, p))
+
+
+def test_dispatcher_regimes():
+    assert epsm.select_algo(1) == "epsma"
+    assert epsm.select_algo(3) == "epsma"
+    assert epsm.select_algo(4) == "epsmb"
+    assert epsm.select_algo(15) == "epsmb"
+    assert epsm.select_algo(16) == "epsmc"
+    assert epsm.select_algo(64) == "epsmc"
+
+
+def test_count_and_positions(rng):
+    t = make_text(rng, 2000, 4)
+    p = extract_pattern(rng, t, 6)
+    oracle = baselines.naive_np(t, p)
+    assert int(epsm.count(t, p)) == oracle.sum()
+    np.testing.assert_array_equal(epsm.positions(t, p), np.nonzero(oracle)[0])
+
+
+def test_string_and_bytes_inputs():
+    mask = np.asarray(epsm.find("abracadabra", "abra"))
+    assert list(np.nonzero(mask)[0]) == [0, 7]
+    mask = np.asarray(epsm.find(b"aaaa", b"aa"))
+    assert list(np.nonzero(mask)[0]) == [0, 1, 2]
+
+
+def test_jit_paths(rng):
+    import jax.numpy as jnp
+
+    t = jnp.asarray(make_text(rng, 512, 4))
+    p = t[17:25]
+    got = np.asarray(epsm.find_jit(t, p))
+    np.testing.assert_array_equal(got, baselines.naive_np(t, p))
+    assert int(epsm.count_jit(t, p)) == baselines.naive_np(t, p).sum()
+
+
+def test_errors():
+    with pytest.raises(ValueError):
+        epsm.find(b"abc", b"")
+    with pytest.raises(ValueError):
+        epsm.find(b"abc", b"a", algo="nope")

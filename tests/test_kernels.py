@@ -1,0 +1,100 @@
+"""Per-kernel interpret-mode validation against the pure-jnp oracles.
+
+Sweeps text sizes (including non-tile-aligned), alphabets and pattern
+lengths, per the kernel-testing contract.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import baselines
+from repro.kernels.epsma import epsma as k_epsma
+from repro.kernels.epsma import epsma_ref
+from repro.kernels.epsmb import epsmb as k_epsmb
+from repro.kernels.epsmb import epsmb_ref
+from repro.kernels.epsmc import epsmc as k_epsmc
+from repro.kernels.epsmc import epsmc_ref
+
+from conftest import extract_pattern, make_text
+
+SIZES = [1, 100, 4095, 4096, 4097, 12289]
+SIGMAS = [2, 4, 256]
+
+
+@pytest.mark.parametrize("sigma", SIGMAS)
+@pytest.mark.parametrize("n", SIZES)
+def test_epsma_kernel_sweep(rng, sigma, n):
+    t = make_text(rng, n, sigma)
+    for m in [1, 2, 3]:
+        if m > n:
+            continue
+        p = extract_pattern(rng, t, m)
+        got = np.asarray(k_epsma(t, p))
+        ref = np.asarray(epsma_ref(t, p))
+        np.testing.assert_array_equal(got, ref, err_msg=f"n={n} m={m}")
+        np.testing.assert_array_equal(got, baselines.naive_np(t, p))
+
+
+@pytest.mark.parametrize("sigma", SIGMAS)
+@pytest.mark.parametrize("n", SIZES)
+@pytest.mark.parametrize("fuse_verify", [True, False])
+def test_epsmb_kernel_sweep(rng, sigma, n, fuse_verify):
+    t = make_text(rng, n, sigma)
+    for m in [4, 5, 8, 15]:
+        if m > n:
+            continue
+        p = extract_pattern(rng, t, m)
+        got = np.asarray(k_epsmb(t, p, fuse_verify=fuse_verify))
+        ref = np.asarray(epsmb_ref(t, p))
+        np.testing.assert_array_equal(got, ref, err_msg=f"n={n} m={m}")
+
+
+@pytest.mark.parametrize("sigma", SIGMAS)
+@pytest.mark.parametrize("n", [100, 4097, 12289])
+def test_epsmc_kernel_sweep(rng, sigma, n):
+    t = make_text(rng, n, sigma)
+    for m in [16, 17, 24, 32, 48, 64]:
+        if m > n:
+            continue
+        p = extract_pattern(rng, t, m)
+        got = np.asarray(k_epsmc(t, p))
+        ref = np.asarray(epsmc_ref(t, p))
+        np.testing.assert_array_equal(got, ref, err_msg=f"n={n} m={m}")
+
+
+def test_epsma_small_tile(rng):
+    # a tile much smaller than the text exercises many grid programs
+    t = make_text(rng, 2000, 4)
+    p = extract_pattern(rng, t, 3)
+    got = np.asarray(k_epsma(t, p, tile=128))
+    np.testing.assert_array_equal(got, baselines.naive_np(t, p))
+
+
+def test_epsmb_small_tile_boundary_matches(rng):
+    # force occurrences that straddle tile boundaries
+    t = make_text(rng, 1024, 4)
+    m = 8
+    for s in [120, 127, 128, 250, 255, 256]:
+        p = t[s : s + m].copy()
+        got = np.asarray(k_epsmb(t, p, tile=128))
+        assert got[s], f"missed straddling occurrence at {s}"
+        np.testing.assert_array_equal(got, baselines.naive_np(t, p))
+
+
+def test_epsmc_apron_matches_previous_tile(rng):
+    # matches that START in the previous tile (apron writes)
+    t = make_text(rng, 9000, 2)  # tiny alphabet → many near-misses
+    m = 20
+    p = extract_pattern(rng, t, m)
+    got = np.asarray(k_epsmc(t, p))
+    np.testing.assert_array_equal(got, baselines.naive_np(t, p))
+
+
+def test_kernel_errors(rng):
+    t = make_text(rng, 100, 4)
+    with pytest.raises(ValueError):
+        k_epsmb(t, make_text(rng, 3, 4))
+    with pytest.raises(ValueError):
+        k_epsmc(t, make_text(rng, 15, 4))
+    with pytest.raises(ValueError):
+        k_epsma(t, np.zeros(0, dtype=np.uint8))

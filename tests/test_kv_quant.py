@@ -1,0 +1,74 @@
+"""int8 KV-cache decoding: quantize/dequantize round-trip and end-to-end
+decode accuracy vs the full-precision cache."""
+
+import dataclasses
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as tf
+
+
+def _cfg():
+    return tf.LMConfig(
+        name="t", n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
+        d_ff=128, vocab=97, dtype="float32", param_dtype="float32",
+        q_chunk=16, kv_chunk=16, ce_chunk=16,
+    )
+
+
+def test_quantize_roundtrip():
+    x = jax.random.normal(jax.random.key(0), (3, 5, 2, 16))
+    q, s = tf.quantize_kv(x)
+    assert q.dtype == jnp.int8 and s.shape == (3, 5, 2)
+    back = tf.dequantize_kv(q, s, jnp.float32)
+    rel = np.abs(np.asarray(back - x)).max() / np.abs(np.asarray(x)).max()
+    assert rel < 1.5 / 127  # one quantization step
+
+
+def test_q8_decode_matches_fp():
+    cfg = _cfg()
+    params = tf.init_params(jax.random.key(0), cfg)
+    B, S = 2, 32
+    tok = jax.random.randint(jax.random.key(1), (B, S), 0, cfg.vocab)
+    logits_p, kc, vc = tf.prefill(params, cfg, tok)
+    kc2, vc2 = tf.make_cache(cfg, B, S + 8, jnp.float32)
+    kc2 = kc2.at[:, :, :S].set(kc)
+    vc2 = vc2.at[:, :, :S].set(vc)
+    nxt = jnp.argmax(logits_p, -1)[:, None]
+    lg_fp, _, _ = tf.decode_step(params, cfg, nxt, jnp.int32(S), kc2, vc2)
+    kq, vq = tf.quantize_cache(kc2, vc2)
+    lg_q8, kq2, vq2 = tf.decode_step_q8(params, cfg, nxt, jnp.int32(S), kq, vq)
+    rel = np.abs(np.asarray(lg_fp - lg_q8)).max() / np.abs(np.asarray(lg_fp)).max()
+    assert rel < 0.05, rel
+    np.testing.assert_array_equal(
+        np.argmax(np.asarray(lg_fp), -1), np.argmax(np.asarray(lg_q8), -1)
+    )
+    # the cache was updated in place at `pos` (int8 entries present)
+    assert kq2["q"].dtype == jnp.int8
+    assert bool(jnp.any(kq2["q"][:, :, S] != 0))
+
+
+def test_q8_multi_step_decode_stays_close():
+    cfg = _cfg()
+    params = tf.init_params(jax.random.key(2), cfg)
+    B, S = 2, 16
+    tok = jax.random.randint(jax.random.key(3), (B, S), 0, cfg.vocab)
+    logits_p, kc, vc = tf.prefill(params, cfg, tok)
+    max_len = S + 8
+    kc2, vc2 = tf.make_cache(cfg, B, max_len, jnp.float32)
+    kc2 = kc2.at[:, :, :S].set(kc)
+    vc2 = vc2.at[:, :, :S].set(vc)
+    kq, vq = tf.quantize_cache(kc2, vc2)
+    nxt_fp = nxt_q8 = jnp.argmax(logits_p, -1)[:, None]
+    agree = 0
+    for step in range(6):
+        lg_fp, kc2, vc2 = tf.decode_step(params, cfg, nxt_fp, jnp.int32(S + step), kc2, vc2)
+        lg_q8, kq, vq = tf.decode_step_q8(params, cfg, nxt_q8, jnp.int32(S + step), kq, vq)
+        a_fp = jnp.argmax(lg_fp, -1)
+        a_q8 = jnp.argmax(lg_q8, -1)
+        agree += int((a_fp == a_q8).sum())
+        nxt_fp, nxt_q8 = a_fp[:, None], a_q8[:, None]
+    assert agree >= 10  # 12 decisions total; tolerate tiny drift

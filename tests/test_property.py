@@ -1,0 +1,113 @@
+"""Hypothesis property tests on the system's invariants."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import baselines, epsm
+from repro.core.multipattern import PatternSet, find_multi
+
+SETTINGS = dict(max_examples=30, deadline=None)
+
+bytes_text = st.binary(min_size=0, max_size=600)
+small_alphabet_text = st.lists(
+    st.integers(0, 3), min_size=0, max_size=600
+).map(lambda xs: np.array(xs, dtype=np.uint8))
+
+
+@given(t=small_alphabet_text, m=st.integers(1, 40), seed=st.integers(0, 2**31 - 1))
+@settings(**SETTINGS)
+def test_find_equals_oracle_random(t, m, seed):
+    rng = np.random.RandomState(seed)
+    p = rng.randint(0, 4, size=m).astype(np.uint8)
+    got = np.asarray(epsm.find(t, p))
+    np.testing.assert_array_equal(got, baselines.naive_np(t, p))
+
+
+@given(t=small_alphabet_text, m=st.integers(1, 40), start=st.integers(0, 10**6))
+@settings(**SETTINGS)
+def test_extracted_pattern_always_found(t, m, start):
+    if len(t) < m:
+        return
+    s = start % (len(t) - m + 1)
+    p = t[s : s + m].copy()
+    mask = np.asarray(epsm.find(t, p))
+    assert mask[s], "extracted occurrence must be reported"
+    # soundness: every reported position is a true occurrence
+    for i in np.nonzero(mask)[0]:
+        assert np.array_equal(t[i : i + m], p)
+
+
+@given(
+    a=small_alphabet_text,
+    b=small_alphabet_text,
+    m=st.integers(1, 16),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(**SETTINGS)
+def test_concat_superadditive_counts(a, b, m, seed):
+    """occ(a ++ b) >= occ(a) + occ(b): concatenation can only add matches."""
+    rng = np.random.RandomState(seed)
+    p = rng.randint(0, 4, size=m).astype(np.uint8)
+    ca = int(epsm.count(a, p)) if len(a) else 0
+    cb = int(epsm.count(b, p)) if len(b) else 0
+    cab = int(epsm.count(np.concatenate([a, b]), p))
+    assert cab >= ca + cb
+
+
+@given(t=small_alphabet_text, seed=st.integers(0, 2**31 - 1))
+@settings(**SETTINGS)
+def test_prefix_shift_invariance(t, seed):
+    """Prepending k bytes shifts every match position by exactly k."""
+    rng = np.random.RandomState(seed)
+    m = int(rng.randint(1, 20))
+    p = rng.randint(0, 4, size=m).astype(np.uint8)
+    k = int(rng.randint(1, 8))
+    prefix = rng.randint(4, 8, size=k).astype(np.uint8)  # disjoint alphabet
+    base = np.asarray(epsm.find(t, p))
+    shifted = np.asarray(epsm.find(np.concatenate([prefix, t]), p))
+    np.testing.assert_array_equal(shifted[k:], base)
+
+
+@given(
+    t=small_alphabet_text,
+    m=st.integers(2, 12),
+    n_pat=st.integers(1, 5),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(**SETTINGS)
+def test_multipattern_matches_individual(t, m, n_pat, seed):
+    rng = np.random.RandomState(seed)
+    pats = rng.randint(0, 4, size=(n_pat, m)).astype(np.uint8)
+    if len(t) == 0:
+        return
+    stacked = np.asarray(find_multi(t, pats))
+    for i in range(n_pat):
+        np.testing.assert_array_equal(
+            stacked[i], np.asarray(epsm.find(t, pats[i]))
+        )
+
+
+@given(seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=15, deadline=None)
+def test_patternset_contains_any(seed):
+    rng = np.random.RandomState(seed)
+    t = rng.randint(0, 4, size=400).astype(np.uint8)
+    present = t[13 : 13 + 6].copy()
+    absent = np.full(6, 200, dtype=np.uint8)
+    ps = PatternSet([absent, present])
+    assert bool(ps.contains_any(t))
+    ps2 = PatternSet([absent])
+    assert not bool(ps2.contains_any(t))
+
+
+@given(t=small_alphabet_text, algo=st.sampled_from(["epsma", "epsmb", "epsmc"]))
+@settings(**SETTINGS)
+def test_algorithms_agree(t, algo):
+    """All three regimes produce identical masks on any input."""
+    if len(t) < 20:
+        return
+    p = t[3:23].copy()  # m=20 valid for every regime (a/b generalize upward)
+    np.testing.assert_array_equal(
+        np.asarray(epsm.find(t, p, algo=algo)),
+        np.asarray(epsm.find(t, p, algo="auto")),
+    )

@@ -1,0 +1,113 @@
+"""Per-architecture smoke tests: reduced config of the same family, one
+forward/train step on CPU, asserting output shapes + no NaNs (deliverable f).
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_IDS, get_arch, reduced_config
+
+LM_ARCHS = [a for a in ARCH_IDS if get_arch(a).family == "lm"]
+RS_ARCHS = [a for a in ARCH_IDS if get_arch(a).family == "recsys"]
+
+
+@pytest.mark.parametrize("arch_id", LM_ARCHS)
+def test_lm_smoke(rng, arch_id):
+    from repro.models import transformer as tf
+
+    cfg = reduced_config(arch_id)
+    params = tf.init_params(jax.random.key(0), cfg)
+    B, S = 2, 64
+    tok = jnp.asarray(rng.randint(0, cfg.vocab, (B, S)), jnp.int32)
+    batch = {"tokens": tok, "targets": jnp.roll(tok, -1, 1)}
+    loss = tf.train_loss(params, cfg, batch)
+    assert loss.shape == ()
+    assert np.isfinite(float(loss)), arch_id
+    # one SGD-ish step moves the loss
+    g = jax.grad(lambda p: tf.train_loss(p, cfg, batch))(params)
+    for leaf in jax.tree_util.tree_leaves(g):
+        assert np.isfinite(np.asarray(leaf, np.float32)).all(), arch_id
+    # decode path
+    logits, kc, vc = tf.prefill(params, cfg, tok)
+    assert logits.shape == (B, cfg.vocab)
+    kc2, vc2 = tf.make_cache(cfg, B, S + 4, jnp.float32)
+    kc2 = kc2.at[:, :, :S].set(kc.astype(kc2.dtype))
+    vc2 = vc2.at[:, :, :S].set(vc.astype(vc2.dtype))
+    lg, _, _ = tf.decode_step(
+        params, cfg, jnp.argmax(logits, -1)[:, None], jnp.int32(S), kc2, vc2
+    )
+    assert lg.shape == (B, cfg.vocab) and np.isfinite(np.asarray(lg)).all()
+
+
+def test_gnn_smoke(rng):
+    from repro.data.graph import batched_molecules, edge_list, synthetic_graph
+    from repro.models import gnn
+
+    cfg = reduced_config("gatedgcn")
+    params = gnn.init_params(jax.random.key(0), cfg)
+    g = synthetic_graph(100, 6, cfg.d_feat, cfg.n_classes, seed=1)
+    batch = {
+        "nodes": jnp.asarray(g.feats),
+        "edges": jnp.asarray(edge_list(g)),
+        "labels": jnp.asarray(g.labels),
+        "label_mask": jnp.ones((g.n_nodes,), jnp.float32),
+    }
+    loss = gnn.train_loss(params, cfg, batch)
+    assert np.isfinite(float(loss))
+    logits = gnn.node_logits(params, cfg, batch)
+    assert logits.shape == (100, cfg.n_classes)
+
+    # molecule (graph readout) variant
+    cfg_m = dataclasses.replace(cfg, readout="graph", d_edge_feat=4, d_feat=8)
+    pm = gnn.init_params(jax.random.key(1), cfg_m)
+    mb = batched_molecules(4, 10, 20, 8, 4, seed=2)
+    mb = {k: jnp.asarray(v) for k, v in mb.items()}
+    lm = gnn.train_loss(pm, cfg_m, mb, n_graphs=4)
+    assert np.isfinite(float(lm))
+
+
+@pytest.mark.parametrize("arch_id", RS_ARCHS)
+def test_recsys_smoke(rng, arch_id):
+    from repro.data.recsys_data import make_batch
+    from repro.models import recsys as rs
+
+    cfg = reduced_config(arch_id)
+    params = rs.init_params(jax.random.key(0), cfg)
+    batch = {k: jnp.asarray(v) for k, v in make_batch(cfg, 16, seed=3).items()}
+    loss = rs.train_loss(params, cfg, batch)
+    assert np.isfinite(float(loss)), arch_id
+    scores = rs.serve_scores(params, cfg, batch)
+    assert scores.shape == (16,)
+    assert np.all((np.asarray(scores) >= 0) & (np.asarray(scores) <= 1))
+    g = jax.grad(lambda p: rs.train_loss(p, cfg, batch))(params)
+    for leaf in jax.tree_util.tree_leaves(g):
+        assert np.isfinite(np.asarray(leaf, np.float32)).all(), arch_id
+    # retrieval path
+    user = {k: v[:1] for k, v in batch.items() if k != "label"}
+    cands = (
+        batch["sparse"][:8]
+        if cfg.kind == "dcn"
+        else jnp.arange(8, dtype=jnp.int32)
+    )
+    sc = rs.retrieval_scores(params, cfg, user, cands)
+    assert sc.shape == (8,) and np.isfinite(np.asarray(sc)).all()
+
+
+def test_all_full_configs_instantiate():
+    """The FULL assigned configs build (shapes only, no allocation)."""
+    for arch_id in ARCH_IDS:
+        spec = get_arch(arch_id)
+        for shape_id in spec.shapes:
+            cfg = spec.make_config(shape_id)
+            assert cfg.name == arch_id
+    # published param counts (within rounding of the model-card numbers)
+    assert abs(get_arch("phi3.5-moe-42b-a6.6b").make_config().param_count() / 1e9 - 42) < 1
+    assert abs(get_arch("phi3.5-moe-42b-a6.6b").make_config().active_param_count() / 1e9 - 6.6) < 0.3
+    assert abs(get_arch("grok-1-314b").make_config().param_count() / 1e9 - 314) < 6
+    assert abs(get_arch("yi-9b").make_config().param_count() / 1e9 - 8.8) < 0.5
+    assert abs(get_arch("smollm-135m").make_config().param_count() / 1e6 - 135) < 10
