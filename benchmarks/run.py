@@ -80,22 +80,66 @@ def bench_kernels(size: int, outdir: Path):
 
 
 def bench_multipattern(size: int, outdir: Path):
-    import jax
+    """Shared-text engine vs the seed vmap path, machine-readable trajectory.
 
-    from repro.core.multipattern import count_multi
+    Writes BENCH_multipattern.json rows {name, us_per_call, GBps, P, B,
+    speedup_vs_vmap} so future PRs can diff throughput.  The workload is the
+    seed bench's: per-pattern occurrence counts of P length-8 patterns
+    extracted from a `size`-byte english corpus (counts are what the
+    pipeline/serving consumers reduce to; the engine never materializes the
+    (B, P, n) mask for them)."""
+    import json
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import engine as eng
+    from repro.core.multipattern import count_multi_vmap
     from repro.data import corpus
 
+    def timeit(fn, *a, reps=7):
+        jax.block_until_ready(fn(*a))
+        ts = []
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn(*a))
+            ts.append(time.perf_counter() - t0)
+        return float(np.median(ts))
+
     text = corpus.make_corpus("english", size, seed=0)
+    tj = jnp.asarray(text)
+    rows = []
     for npat in (1, 8, 32):
         pats = corpus.extract_patterns(text, 8, npat, seed=5)
-        fn = jax.jit(count_multi)
-        fn(text, pats).block_until_ready()
-        t0 = time.perf_counter()
-        for _ in range(3):
-            fn(text, pats).block_until_ready()
-        dt = (time.perf_counter() - t0) / 3
-        _emit(f"multipattern/p{npat}", dt * 1e6,
-              f"GBps_per_pattern={size*npat/dt/1e9:.3f}")
+        pj = jnp.asarray(pats)
+        f_vmap = jax.jit(count_multi_vmap)
+        plans = eng.compile_patterns(list(pats))
+        f_eng = jax.jit(lambda t, plans=plans: eng.count_many(eng.build_index(t), plans))
+        assert np.array_equal(
+            np.asarray(f_eng(tj))[0], np.asarray(f_vmap(tj, pj))
+        ), "engine/vmap count divergence"
+        dt_v = timeit(f_vmap, tj, pj)
+        dt_e = timeit(f_eng, tj)
+        for name, dt, speedup in (
+            (f"multipattern/vmap_baseline/p{npat}", dt_v, 1.0),
+            (f"multipattern/engine/p{npat}", dt_e, dt_v / dt_e),
+        ):
+            rows.append({
+                "name": name,
+                "us_per_call": dt * 1e6,
+                "GBps": size / dt / 1e9,
+                "GBps_effective": size * npat / dt / 1e9,
+                "P": npat,
+                "B": 1,
+                "m": 8,
+                "size_bytes": size,
+                "speedup_vs_vmap": round(speedup, 3),
+            })
+            _emit(name, dt * 1e6,
+                  f"GBps_eff={size*npat/dt/1e9:.3f};speedup={speedup:.2f}x")
+    (outdir / "BENCH_multipattern.json").write_text(json.dumps(rows, indent=1))
+    # repo-root copy: the perf-trajectory artifact future PRs diff against
+    Path("BENCH_multipattern.json").write_text(json.dumps(rows, indent=1))
 
 
 def bench_pipeline(outdir: Path):
@@ -138,7 +182,9 @@ def main():
     print("name,us_per_call,derived")
     bench_paper_tables(size, args.full, outdir)
     bench_kernels(size, outdir)
-    bench_multipattern(min(size, 1_000_000), outdir)
+    # fixed 1 MB workload: BENCH_multipattern.json is the perf-trajectory
+    # artifact future PRs diff, so its shape must not depend on --size
+    bench_multipattern(1_000_000, outdir)
     bench_pipeline(outdir)
     bench_roofline_report(outdir)
 

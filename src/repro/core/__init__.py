@@ -15,10 +15,26 @@ from repro.core.epsm import (
     positions,
     select_algo,
 )
+from repro.core.engine import (
+    PatternPlan,
+    TextIndex,
+    any_many,
+    build_index,
+    compile_patterns,
+    count_many,
+    match_many,
+)
 from repro.core.multipattern import PatternSet, contains_any, count_multi, find_multi
 from repro.core.baselines import BASELINES, naive_np
 
 __all__ = [
+    "PatternPlan",
+    "TextIndex",
+    "any_many",
+    "build_index",
+    "compile_patterns",
+    "count_many",
+    "match_many",
     "EPSMA_MAX",
     "EPSMB_MAX",
     "EPSMC_BETA",

@@ -21,16 +21,17 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core import epsm
 from repro.core.packing import as_u8
+from repro.dist.compat import axis_size as _axis_size_of, shard_map
 
 AxisNames = Union[str, tuple]
 
 
 def _axis_size(axis_names: AxisNames) -> jnp.ndarray:
     if isinstance(axis_names, str):
-        return lax.axis_size(axis_names)
+        return _axis_size_of(axis_names)
     size = 1
     for a in axis_names:
-        size = size * lax.axis_size(a)
+        size = size * _axis_size_of(a)
     return size
 
 
@@ -39,14 +40,14 @@ def _flat_index(axis_names: AxisNames) -> jnp.ndarray:
         return lax.axis_index(axis_names)
     idx = jnp.int32(0)
     for a in axis_names:
-        idx = idx * lax.axis_size(a) + lax.axis_index(a)
+        idx = idx * _axis_size_of(a) + lax.axis_index(a)
     return idx
 
 
 def _next_rank_halo(shard: jnp.ndarray, halo: int, axis_names: AxisNames) -> jnp.ndarray:
     """Exact next-flat-rank halo exchange (handles multi-axis sharding)."""
     if isinstance(axis_names, str):
-        k = lax.axis_size(axis_names)
+        k = _axis_size_of(axis_names)
         head = lax.ppermute(
             shard[:halo], axis_names, perm=[(i, (i - 1) % k) for i in range(k)]
         )
@@ -59,7 +60,7 @@ def _next_rank_halo(shard: jnp.ndarray, halo: int, axis_names: AxisNames) -> jnp
     # ppermutes is fragile; instead use ppermute over each axis with the
     # boundary-carry trick: receive from (flat+1), i.e. send to (flat-1).
     fast = names[-1]
-    kf = lax.axis_size(fast)
+    kf = _axis_size_of(fast)
     # everyone sends head to previous rank on fast axis
     recv_fast = lax.ppermute(head, fast, perm=[(i, (i - 1) % kf) for i in range(kf)])
     if len(names) == 1:
@@ -71,7 +72,7 @@ def _next_rank_halo(shard: jnp.ndarray, halo: int, axis_names: AxisNames) -> jnp
     slow = names[:-1]
     carried = recv_fast
     for a in reversed(slow):
-        k = lax.axis_size(a)
+        k = _axis_size_of(a)
         carried = lax.ppermute(carried, a, perm=[(i, (i - 1) % k) for i in range(k)])
     at_boundary = lax.axis_index(fast) == kf - 1
     head_next = jnp.where(at_boundary, carried, recv_fast)
@@ -94,7 +95,7 @@ def make_distributed_find(mesh, axis_names: AxisNames = "data", *, algo: str = "
         tail_ok = jnp.arange(ln) <= (ln - m)
         return jnp.where(is_last, mask & tail_ok, mask)
 
-    fn = jax.shard_map(
+    fn = shard_map(
         local, mesh=mesh, in_specs=(spec, P()), out_specs=spec, check_vma=False
     )
     return fn
@@ -115,7 +116,7 @@ def make_distributed_count(mesh, axis_names: AxisNames = "data", *, algo: str = 
         local_count = mask.sum(dtype=jnp.int32)
         return lax.psum(local_count, axis_names)
 
-    fn = jax.shard_map(
+    fn = shard_map(
         local,
         mesh=mesh,
         in_specs=(find_fn_local_spec, P()),

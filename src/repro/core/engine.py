@@ -1,0 +1,654 @@
+"""Shared-text batched multi-pattern matching engine (the repo's hot path).
+
+The paper's packed matcher amortizes one SSE word op over 16 positions; its
+sequel (Faro & Kulekci, SPIRE 2012 — paper ref [10]) amortizes one pass over
+the text across many patterns.  This module is that second amortization done
+TPU-style, as an explicit two-phase design (DESIGN.md §7):
+
+  * :class:`TextIndex` — everything that depends only on the text, computed
+    ONCE per batch of texts: the packed u32 4-gram view (EPSMb's anchor
+    registers) and the aligned beta-block fingerprints (EPSMc's wscrc
+    stream).  Batchable over a leading (B, n) dimension with per-row true
+    lengths, so ragged documents ride in one padded matrix.
+
+  * :class:`PatternPlan` — everything that depends only on the patterns,
+    compiled once per equal-length group: the stacked packed anchor words
+    (EPSMb) and a union 2^k lookup table over all patterns' block
+    fingerprints with pattern-id payload bitmasks (EPSMc).  The plan for a
+    group of P patterns answers all P in one probe of the shared text work.
+
+  * :func:`match_many` joins them: ``bool[B, P, n]`` match-start masks for
+    P patterns x B texts in ONE device dispatch (one jit call, no host loop
+    over patterns, groups, or batch elements).  :func:`count_many` /
+    :func:`any_many` are the reduced variants the data pipeline and serving
+    engine actually consume — they never materialize the (B, P, n) mask.
+
+Why this beats the vmapped per-pattern scan (the previous multipattern path):
+XLA already shares the text packing across a vmap, but the per-position
+compare work still scales as O(P * n).  The engine's union LUT makes the
+per-position filter O(n) *independent of P* — one fingerprint probe answers
+"could ANY pattern start near here?" — and only the rare candidate blocks
+pay the O(P) verification.  Measured on this backend: >= 3x on
+counts/containment for P=32 m=8 over 1 MB (benchmarks/run.py writes the
+trajectory to BENCH_multipattern.json).
+
+Exactness never depends on the fingerprint heuristics: candidate overflow
+beyond the compaction budget falls back to a dense verification branch via
+lax.cond, exactly like core/epsm.py's single-pattern EPSMc.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.epsm import EPSMA_MAX, EPSMB_MAX, EPSMC_BETA, _epsmc_stride
+from repro.core.packing import (
+    PACK,
+    as_u8,
+    fingerprint_weights,
+    hash_blocks,
+    pack_u32,
+    shift_left,
+)
+
+# Engine-wide fingerprint width.  Wider than the single-pattern EPSMc table
+# (k=11): the union LUT is shared by up to ~hundreds of patterns, and false
+# positives cost a whole block verification, so we buy 2^17 * 1 byte of table
+# to keep the candidate stream sparse.
+ENGINE_KBITS = 17
+# Block width for compacting per-position EPSMb candidates before the
+# fixed-size nonzero: nonzero over n positions is the O(n) floor of the
+# sparse path (measured ~40ms/MB on this backend), nonzero over n/32 blocks
+# is noise.  32 keeps the verified-position inflation (block granularity vs
+# true candidates) small; 128 measured ~1.6x slower end to end.
+CAND_BLOCK = 32
+
+_FP_MULT = np.uint32(2654435761)  # Knuth's multiplicative-hash constant
+# fixed odd salts mixing the packed words of one window into one fingerprint
+_WORD_SALTS = np.uint32(
+    np.random.RandomState(0xE95).randint(1, 2**30, size=8) * 2 + 1
+)
+
+
+# ---------------------------------------------------------------------------
+# Phase 1: TextIndex — pack & fingerprint the text once
+# ---------------------------------------------------------------------------
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class TextIndex:
+    """Pattern-independent view of a (B, n) batch of padded texts."""
+
+    text: jnp.ndarray      # (B, n) uint8
+    packed: jnp.ndarray    # (B, n) uint32 — LE-packed 4-gram per position
+    block_fp: jnp.ndarray  # (B, n // beta) int32 — aligned beta-block k-bit fps
+    lengths: jnp.ndarray   # (B,) int32 — true byte length of each row
+
+    def tree_flatten(self):
+        return (self.text, self.packed, self.block_fp, self.lengths), ()
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        del aux
+        return cls(*children)
+
+    @property
+    def batch(self) -> int:
+        return self.text.shape[0]
+
+    @property
+    def n(self) -> int:
+        return self.text.shape[1]
+
+
+def build_index(
+    texts,
+    lengths=None,
+    *,
+    beta: int = EPSMC_BETA,
+    kbits: int = ENGINE_KBITS,
+) -> TextIndex:
+    """Pack + fingerprint once.  `texts` is (n,) or (B, n) uint8 (or a list
+    of byte strings, padded to the longest).  jit-compatible for array input.
+    """
+    if isinstance(texts, (list, tuple)):
+        rows = [np.asarray(jax.device_get(as_u8(t))) for t in texts]
+        n = max((len(r) for r in rows), default=0)
+        mat = np.zeros((len(rows), n), np.uint8)
+        for i, r in enumerate(rows):
+            mat[i, : len(r)] = r
+        texts = mat
+        if lengths is None:
+            lengths = np.asarray([len(r) for r in rows], np.int32)
+    t = as_u8(texts)
+    if t.ndim == 1:
+        t = t[None, :]
+    if t.ndim != 2:
+        raise ValueError("texts must be (n,) or (B, n)")
+    B, n = t.shape
+    if lengths is None:
+        lengths = jnp.full((B,), n, jnp.int32)
+    lengths = jnp.asarray(lengths, jnp.int32)
+    packed = pack_u32(t)
+    nblk = n // beta
+    blocks = t[:, : nblk * beta].reshape(B, nblk, beta)
+    block_fp = hash_blocks(blocks, fingerprint_weights(beta), kbits)
+    return TextIndex(text=t, packed=packed, block_fp=block_fp, lengths=lengths)
+
+
+# ---------------------------------------------------------------------------
+# Phase 2: PatternPlan — compile a same-length pattern group once
+# ---------------------------------------------------------------------------
+
+def _word_offsets(m: int) -> Tuple[int, ...]:
+    """Static offsets of the packed u32 words covering bytes [0, m): strided
+    4-gram words plus one overlapping final word when m % 4 != 0."""
+    offs = list(range(0, m - PACK + 1, PACK))
+    if m % PACK and m >= PACK:
+        offs.append(m - PACK)
+    return tuple(offs)
+
+
+def _np_pack_words(pats: np.ndarray, offsets) -> np.ndarray:
+    """(P, m) uint8 -> (P, nw) uint32 LE-packed anchor words."""
+    p32 = pats.astype(np.uint32)
+    cols = []
+    for o in offsets:
+        cols.append(
+            p32[:, o]
+            | (p32[:, o + 1] << 8)
+            | (p32[:, o + 2] << 16)
+            | (p32[:, o + 3] << 24)
+        )
+    return np.stack(cols, axis=1) if cols else np.zeros((pats.shape[0], 0), np.uint32)
+
+
+def _np_window_fingerprint(words: np.ndarray, kbits: int) -> np.ndarray:
+    """Fingerprint of a full window from its packed words (numpy side)."""
+    v = np.zeros(words.shape[:-1], np.uint32)
+    for i in range(words.shape[-1]):
+        v = v + words[..., i] * _WORD_SALTS[i]
+    return ((v * _FP_MULT) >> np.uint32(32 - kbits)).astype(np.int32)
+
+
+def _window_fingerprint(packed: jnp.ndarray, offsets, kbits: int) -> jnp.ndarray:
+    """Same fingerprint on the text side: (B, n) packed view -> (B, n) int32
+    fingerprint of the m-byte window starting at every position.  O(n) work
+    independent of the number of patterns — this is the engine's whole win."""
+    v = jnp.zeros(packed.shape, jnp.uint32)
+    for i, o in enumerate(offsets):
+        v = v + shift_left(packed, o) * jnp.uint32(int(_WORD_SALTS[i]))
+    return ((v * jnp.uint32(int(_FP_MULT))) >> jnp.uint32(32 - kbits)).astype(
+        jnp.int32
+    )
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class PatternPlan:
+    """Compiled matcher state for one equal-length pattern group."""
+
+    m: int                   # static: pattern length
+    kbits: int               # static: fingerprint width
+    ids: Tuple[int, ...]     # static: original indices of the group's patterns
+    distinct: bool           # static: all P window fingerprints unique (EPSMb)
+    patterns: jnp.ndarray    # (P, m) uint8
+    anchors: jnp.ndarray     # (P, nw) uint32 stacked packed anchor words
+    lut_any: jnp.ndarray     # (2^kbits,) bool union fingerprint table
+    lut_pid: Optional[jnp.ndarray]   # (2^kbits,) int32 pattern-id payload (EPSMb)
+    lut_bits: Optional[jnp.ndarray]  # (2^kbits, ceil(P/32)) uint32 payloads (EPSMc)
+    hp: Optional[jnp.ndarray]        # (P, stride) int32 block fps (EPSMc)
+
+    def tree_flatten(self):
+        return (
+            (self.patterns, self.anchors, self.lut_any, self.lut_pid,
+             self.lut_bits, self.hp),
+            (self.m, self.kbits, self.ids, self.distinct),
+        )
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        m, kbits, ids, distinct = aux
+        return cls(m, kbits, ids, distinct, *children)
+
+    @property
+    def n_patterns(self) -> int:
+        return self.patterns.shape[0]
+
+    @property
+    def regime(self) -> str:
+        if self.m < EPSMA_MAX:
+            return "a"
+        if self.m < EPSMB_MAX:
+            return "b"
+        return "c"
+
+
+def compile_patterns(
+    patterns: Sequence, *, kbits: int = ENGINE_KBITS, beta: int = EPSMC_BETA
+) -> Tuple[PatternPlan, ...]:
+    """Group patterns by length and compile one PatternPlan per group.
+
+    Returned plans are sorted by m; each plan's ``ids`` maps its rows back to
+    positions in the input sequence (match_many output is plan-concatenated).
+    """
+    groups: dict = {}
+    for i, p in enumerate(patterns):
+        arr = np.asarray(jax.device_get(as_u8(p)))
+        if arr.ndim != 1 or arr.size == 0:
+            raise ValueError("patterns must be non-empty 1-D byte strings")
+        groups.setdefault(arr.size, []).append((i, arr))
+
+    plans: List[PatternPlan] = []
+    for m in sorted(groups):
+        ids = tuple(i for i, _ in groups[m])
+        pats = np.stack([a for _, a in groups[m]])
+        P = pats.shape[0]
+        offsets = _word_offsets(m)
+        anchors = _np_pack_words(pats, offsets)
+        lut_any = np.zeros((1 << kbits,), np.bool_)
+        lut_pid = lut_bits = hp = None
+        distinct = False
+        if m < EPSMA_MAX:
+            pass  # dense byte compares; no fingerprint machinery
+        elif m < EPSMB_MAX:
+            hw = _np_window_fingerprint(anchors, kbits)  # (P,)
+            lut_any[hw] = True
+            # pattern-id payload: when every pattern owns a unique slot, a
+            # candidate position names its ONE claimed pattern and
+            # verification compares a single gathered anchor instead of all P
+            distinct = len(set(hw.tolist())) == P
+            if distinct:
+                lut_pid = np.zeros((1 << kbits,), np.int32)
+                lut_pid[hw] = np.arange(P, dtype=np.int32)
+        else:
+            # EPSMc: union LUT over the aligned-block fingerprints a true
+            # occurrence can present.  Only offsets j < stride are ever
+            # probed (the occurrence's unique "dedup" block — see
+            # _match_group_c), so only those are registered: fewer entries,
+            # fewer false positives.
+            stride = _epsmc_stride(m, beta)
+            w = np.asarray(jax.device_get(fingerprint_weights(beta))).astype(np.int64)
+            offs = np.arange(stride)
+            blocks = pats[:, offs[:, None] + np.arange(beta)[None, :]]  # (P, stride, beta)
+            h = (blocks.astype(np.int64) * w[None, None, :]).sum(-1)
+            hp = (h & ((1 << kbits) - 1)).astype(np.int32)  # (P, stride)
+            nwords = -(-P // 32)
+            lut_bits = np.zeros((1 << kbits, nwords), np.uint32)
+            for p_i in range(P):
+                bit = np.uint32(1 << (p_i % 32))
+                lut_bits[hp[p_i], p_i // 32] |= bit
+            lut_any[hp.reshape(-1)] = True
+        plans.append(
+            PatternPlan(
+                m=m,
+                kbits=kbits,
+                ids=ids,
+                distinct=distinct,
+                patterns=jnp.asarray(pats),
+                anchors=jnp.asarray(anchors),
+                lut_any=jnp.asarray(lut_any),
+                lut_pid=None if lut_pid is None else jnp.asarray(lut_pid),
+                lut_bits=None if lut_bits is None else jnp.asarray(lut_bits),
+                hp=None if hp is None else jnp.asarray(hp),
+            )
+        )
+    return tuple(plans)
+
+
+def plan_order(plans: Sequence[PatternPlan]) -> np.ndarray:
+    """inverse permutation: row i of the concatenated engine output is
+    pattern ``order[i]`` of the original input sequence."""
+    return np.asarray([i for plan in plans for i in plan.ids], np.int64)
+
+
+_PLAN_CACHE: dict = {}
+_PLAN_CACHE_MAX = 64
+
+
+def compile_patterns_cached(patterns: Sequence) -> Tuple[PatternPlan, ...]:
+    """compile_patterns with a small host-side memo keyed by pattern bytes.
+
+    The convenience wrappers (find_multi & co., the batched kernel) receive
+    raw pattern stacks per call; without this, every call would pay the
+    host-side plan build (2^17 LUT allocation + upload) that PatternSet
+    amortizes by construction."""
+    key = tuple(bytes(np.asarray(jax.device_get(as_u8(p)))) for p in patterns)
+    plans = _PLAN_CACHE.get(key)
+    if plans is None:
+        plans = compile_patterns(patterns)
+        if len(_PLAN_CACHE) >= _PLAN_CACHE_MAX:
+            _PLAN_CACHE.pop(next(iter(_PLAN_CACHE)))
+        _PLAN_CACHE[key] = plans
+    return plans
+
+
+# ---------------------------------------------------------------------------
+# Matchers (one per regime).  Each returns mask (B, P, n) or counts (B, P).
+# ---------------------------------------------------------------------------
+
+def _valid_starts(index: TextIndex, m: int) -> jnp.ndarray:
+    """(B, n) — True where a length-m occurrence may start.  Encodes the
+    ragged-padding contract: windows never cross a row's true end, so
+    patterns cannot match across document boundaries or inside padding."""
+    n = index.n
+    return jnp.arange(n, dtype=jnp.int32)[None, :] <= (index.lengths[:, None] - m)
+
+
+def _match_group_a(index: TextIndex, plan: PatternPlan) -> jnp.ndarray:
+    """m < 4: dense shifted byte compares (EPSMa, batched over B and P)."""
+    t = index.text
+    acc = _valid_starts(index, plan.m)[:, None, :]
+    for j in range(plan.m):
+        acc = acc & (shift_left(t, j)[:, None, :] == plan.patterns[None, :, j, None])
+    return acc
+
+
+def _dense_b(index: TextIndex, plan: PatternPlan) -> jnp.ndarray:
+    """Stacked-anchor dense compare: AND over packed word compares.  This is
+    the exact EPSMb filter+verify fused — also the overflow fallback."""
+    acc = _valid_starts(index, plan.m)[:, None, :]
+    for i, o in enumerate(_word_offsets(plan.m)):
+        w = shift_left(index.packed, o)
+        acc = acc & (w[:, None, :] == plan.anchors[None, :, i, None])
+    return acc
+
+
+def _b_candidates(index: TextIndex, plan: PatternPlan):
+    """Shared-text candidate generation for EPSMb: one O(n) fingerprint +
+    union-LUT probe (independent of P), compacted to CAND_BLOCK granularity."""
+    B, n = index.text.shape
+    offsets = _word_offsets(plan.m)
+    h = _window_fingerprint(index.packed, offsets, plan.kbits)  # (B, n)
+    cand = plan.lut_any[h] & _valid_starts(index, plan.m)
+    C = CAND_BLOCK
+    nblk = -(-n // C)
+    pad = nblk * C - n
+    blk_any = jnp.pad(cand, ((0, 0), (0, pad))).reshape(B, nblk, C).any(-1)
+    # budget covers expected fingerprint collisions AND heavy-tailed true-match
+    # densities (patterns sampled from the text itself light up ~1/3 of the
+    # blocks before the sparse path stops paying); beyond it, dense fallback.
+    exp = (B * n * plan.n_patterns) >> plan.kbits
+    budget = int(min(B * nblk, max(1024, 4 * exp + 8 * B, (B * nblk) // 3)))
+    return blk_any, budget, nblk
+
+
+def _gather_candidate_rows(index: TextIndex, m: int, blk_any, budget, nblk):
+    """Shared sparse-path prelude: fixed-budget nonzero over candidate
+    blocks, gather each block's C+m-1 bytes, re-pack them once.
+
+    Returns (rows_packed (nb, C+m-1) u32, bvec (nb,), bstart (nb,), live)."""
+    B, n = index.text.shape
+    C = CAND_BLOCK
+    (flat,) = jnp.nonzero(blk_any.reshape(-1), size=budget, fill_value=B * nblk)
+    live = flat < B * nblk
+    flat = jnp.where(live, flat, 0)
+    bvec = flat // nblk
+    bstart = (flat % nblk) * C
+    t_pad = jnp.pad(index.text, ((0, 0), (0, nblk * C - n + m)))
+    rows = t_pad[bvec[:, None], bstart[:, None] + jnp.arange(C + m - 1)]
+    return pack_u32(rows), bvec, bstart, live
+
+
+def _b_verify(index: TextIndex, plan: PatternPlan, blk_any, budget, nblk):
+    """Gather candidate blocks, re-pack them, verify all positions x patterns.
+
+    Returns (ok (nb, C, P), bvec (nb,), starts (nb, C) with n as the
+    out-of-range sentinel)."""
+    n = index.text.shape[1]
+    m, C = plan.m, CAND_BLOCK
+    rows_packed, bvec, bstart, live = _gather_candidate_rows(
+        index, m, blk_any, budget, nblk
+    )
+    ok = None
+    for i, o in enumerate(_word_offsets(m)):
+        w = rows_packed[:, o : o + C]
+        eq = w[:, :, None] == plan.anchors[None, None, :, i]
+        ok = eq if ok is None else ok & eq
+    starts = bstart[:, None] + jnp.arange(C, dtype=jnp.int32)[None, :]
+    in_row = starts <= (index.lengths[bvec][:, None] - m)
+    ok = ok & (in_row & live[:, None])[:, :, None]
+    starts = jnp.where(in_row & live[:, None], starts, n)
+    return ok, bvec, starts
+
+
+def _dense_count(index: TextIndex, plan: PatternPlan, dense_fn) -> jnp.ndarray:
+    """Counts via the dense mask (overflow fallback only — the sparse paths
+    never materialize (B, P, n))."""
+    return dense_fn(index, plan).sum(-1, dtype=jnp.int32)
+
+
+def _match_group_b(index: TextIndex, plan: PatternPlan) -> jnp.ndarray:
+    # For full (B, P, n) masks the stacked-anchor dense compare is already
+    # memory-bound optimal on this backend (the output write dominates), and
+    # a candidate scatter of the same size measured ~70x slower.  The union
+    # LUT earns its keep on the reduced outputs (_count_group_b), where the
+    # (B, P, n) intermediate can be skipped entirely.
+    return _dense_b(index, plan)
+
+
+def _b_verify_pid(index: TextIndex, plan: PatternPlan, blk_any, budget, nblk):
+    """Distinct-fingerprint fast verify: each candidate position names its one
+    claimed pattern through the pid payload LUT, so verification gathers and
+    compares a SINGLE anchor row per position — O(nb * C) work instead of
+    O(nb * C * P).  Returns (ok (nb, C) int32, bvec (nb,), pid (nb, C))."""
+    m, C = plan.m, CAND_BLOCK
+    rows_packed, bvec, bstart, live = _gather_candidate_rows(
+        index, m, blk_any, budget, nblk
+    )
+    # re-derive the window fingerprint from the gathered rows (cheaper than a
+    # second big gather out of the full (B, n) fingerprint map)
+    h = _window_fingerprint(rows_packed, _word_offsets(m), plan.kbits)[:, :C]
+    candp = plan.lut_any[h]
+    pid = plan.lut_pid[h]  # (nb, C) the one pattern that could start here
+    sel = plan.anchors[pid]  # (nb, C, nw)
+    ok = candp
+    for i, o in enumerate(_word_offsets(m)):
+        ok = ok & (rows_packed[:, o : o + C] == sel[:, :, i])
+    starts = bstart[:, None] + jnp.arange(C, dtype=jnp.int32)[None, :]
+    ok = ok & (starts <= index.lengths[bvec][:, None] - m) & live[:, None]
+    return ok.astype(jnp.int32), bvec, pid
+
+
+def _count_group_b(index: TextIndex, plan: PatternPlan) -> jnp.ndarray:
+    B, n = index.text.shape
+    P = plan.n_patterns
+    # The sparse path pays once the dense (B, P, n) mask would fall out of
+    # cache during the reduce (measured cliff ~8 MB of mask on this
+    # backend); below that, or for tiny pattern sets, dense wins.
+    if n < 4 * CAND_BLOCK or P < 4 or B * n * P < 8_000_000:
+        return _dense_count(index, plan, _dense_b)
+    blk_any, budget, nblk = _b_candidates(index, plan)
+
+    def sparse_pid(_):
+        ok, bvec, pid = _b_verify_pid(index, plan, blk_any, budget, nblk)
+        counts = jnp.zeros((B, P), jnp.int32)
+        return counts.at[bvec[:, None], pid].add(ok, mode="drop")
+
+    def sparse_all(_):
+        ok, bvec, _ = _b_verify(index, plan, blk_any, budget, nblk)
+        # reduce the block axis with a batched matvec: XLA-CPU's plain
+        # bool-sum reduce runs at ~5ns/element, the dot lowers to the fast
+        # GEMV path (measured 92ms -> 7ms on the budget-sized ok tensor)
+        sums = jnp.einsum(
+            "bcp,c->bp", ok.astype(jnp.float32),
+            jnp.ones((CAND_BLOCK,), jnp.float32),
+        )
+        counts = jnp.zeros((B, P), jnp.float32)
+        return counts.at[bvec].add(sums, mode="drop").astype(jnp.int32)
+
+    sparse = sparse_pid if plan.distinct else sparse_all
+    return lax.cond(
+        blk_any.sum(dtype=jnp.int32) <= budget,
+        sparse,
+        lambda _: _dense_count(index, plan, _dense_b),
+        None,
+    )
+
+
+# Fallback for EPSMc overflow: dense shifted byte compares — O(m) passes but
+# memory-bounded at (B, P, n).  Same computation as the EPSMa matcher, which
+# is exact for every m.
+_dense_c = _match_group_a
+
+
+def _c_candidates(index: TextIndex, plan: PatternPlan):
+    """Probe the union LUT at the strided inspected blocks (paper Fig. 1
+    bottom, many patterns at once).  Every occurrence has exactly ONE
+    inspected block with offset j < stride inside its window (the dedup
+    block), so candidates are found — and counted — exactly once."""
+    beta = EPSMC_BETA
+    stride = _epsmc_stride(plan.m, beta)
+    step = stride // beta
+    ht = index.block_fp[:, ::step]  # (B, G) — strided view, no gather
+    cand = plan.lut_any[ht]
+    B, G = cand.shape
+    noff_used = min(stride, plan.m - beta + 1)
+    exp = (B * G * plan.n_patterns * noff_used) >> plan.kbits
+    budget = int(min(max(B * G, 1), max(64, 4 * exp + 8 * B)))
+    return ht, cand, stride, noff_used, budget
+
+
+def _c_verify(index, plan, ht, cand, stride, noff_used, budget):
+    """Verify candidate blocks against all P patterns at the <= stride
+    offsets, gated by the LUT's pattern-id payload bitmask."""
+    B, n = index.text.shape
+    m = plan.m
+    G = cand.shape[1]
+    (flat,) = jnp.nonzero(cand.reshape(-1), size=budget, fill_value=B * G)
+    live = flat < B * G
+    flat = jnp.where(live, flat, 0)
+    bvec = flat // G
+    bsel = (flat % G) * stride  # inspected block start
+    front = noff_used - 1
+    span = front + m
+    t_pad = jnp.pad(index.text, ((0, 0), (front, span)))
+    rows = t_pad[bvec[:, None], bsel[:, None] + jnp.arange(span)]  # (nb, span)
+    # pattern-id payload: which patterns registered this fingerprint?
+    P = plan.n_patterns
+    bits = plan.lut_bits[ht.reshape(-1)[jnp.where(live, flat, 0)]]  # (nb, W)
+    word = jnp.arange(P) // 32
+    shift = jnp.arange(P, dtype=jnp.uint32) % 32
+    pgate = ((bits[:, word] >> shift[None, :]) & 1).astype(jnp.bool_)  # (nb, P)
+    oks, sts = [], []
+    for j in range(noff_used):
+        win = rows[:, front - j : front - j + m]  # window starting at bsel - j
+        st = bsel - j
+        in_row = (st >= 0) & (st <= index.lengths[bvec] - m)
+        ok = (
+            pgate
+            & (live & in_row)[:, None]
+            & jnp.all(win[:, None, :] == plan.patterns[None, :, :], axis=-1)
+        )
+        oks.append(ok)
+        sts.append(jnp.where(live & in_row, st, n))
+    ok_all = jnp.concatenate(oks)        # (noff_used * nb, P)
+    st_all = jnp.concatenate(sts)        # (noff_used * nb,)
+    b_all = jnp.concatenate([bvec] * noff_used)
+    return ok_all, b_all, st_all
+
+
+def _match_group_c(index: TextIndex, plan: PatternPlan) -> jnp.ndarray:
+    B, n = index.text.shape
+    P = plan.n_patterns
+    if index.block_fp.shape[1] == 0:
+        return _dense_c(index, plan)
+    ht, cand, stride, noff_used, budget = _c_candidates(index, plan)
+
+    def sparse(_):
+        ok, b_all, st_all = _c_verify(index, plan, ht, cand, stride, noff_used, budget)
+        out = jnp.zeros((B, P, n + 1), jnp.bool_)
+        out = out.at[
+            b_all[:, None, None], jnp.arange(P)[None, None, :], st_all[:, None, None]
+        ].max(ok[:, None, :], mode="drop")
+        return out[:, :, :n]
+
+    return lax.cond(
+        cand.sum(dtype=jnp.int32) <= budget, sparse, lambda _: _dense_c(index, plan), None
+    )
+
+
+def _count_group_c(index: TextIndex, plan: PatternPlan) -> jnp.ndarray:
+    B = index.batch
+    if index.block_fp.shape[1] == 0:
+        return _dense_c(index, plan).sum(-1, dtype=jnp.int32)
+    ht, cand, stride, noff_used, budget = _c_candidates(index, plan)
+
+    def sparse(_):
+        ok, b_all, _ = _c_verify(index, plan, ht, cand, stride, noff_used, budget)
+        counts = jnp.zeros((B, plan.n_patterns), jnp.int32)
+        return counts.at[b_all].add(ok.astype(jnp.int32), mode="drop")
+
+    return lax.cond(
+        cand.sum(dtype=jnp.int32) <= budget,
+        sparse,
+        lambda _: _dense_count(index, plan, _dense_c),
+        None,
+    )
+
+
+_MATCH = {"a": _match_group_a, "b": _match_group_b, "c": _match_group_c}
+_COUNT = {
+    "a": lambda idx, plan: _match_group_a(idx, plan).sum(-1, dtype=jnp.int32),
+    "b": _count_group_b,
+    "c": _count_group_c,
+}
+
+
+# ---------------------------------------------------------------------------
+# Public joins: one dispatch for P patterns x B texts
+# ---------------------------------------------------------------------------
+
+def match_many(index: TextIndex, plans: Sequence[PatternPlan]) -> jnp.ndarray:
+    """bool[B, P_total, n] match-start masks, rows in plan-concatenated order
+    (use :func:`plan_order` to map back to the original pattern order)."""
+    if not plans:
+        return jnp.zeros((index.batch, 0, index.n), jnp.bool_)
+    return jnp.concatenate([_MATCH[p.regime](index, p) for p in plans], axis=1)
+
+
+def count_many(index: TextIndex, plans: Sequence[PatternPlan]) -> jnp.ndarray:
+    """int32[B, P_total] occurrence counts — the reduced hot path: never
+    materializes the (B, P, n) mask."""
+    if not plans:
+        return jnp.zeros((index.batch, 0), jnp.int32)
+    return jnp.concatenate([_COUNT[p.regime](index, p) for p in plans], axis=1)
+
+
+def any_many(index: TextIndex, plans: Sequence[PatternPlan]) -> jnp.ndarray:
+    """bool[B, P_total] — does pattern p occur anywhere in text b?"""
+    return count_many(index, plans) > 0
+
+
+def any_hit(index: TextIndex, plans: Sequence[PatternPlan]) -> jnp.ndarray:
+    """bool[B] — does ANY pattern occur in text b?  (blocklist predicate)"""
+    return any_many(index, plans).any(axis=-1)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def match_many_jit(index: TextIndex, plans: Tuple[PatternPlan, ...]) -> jnp.ndarray:
+    return match_many(index, plans)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def count_many_jit(index: TextIndex, plans: Tuple[PatternPlan, ...]) -> jnp.ndarray:
+    return count_many(index, plans)
+
+
+@jax.jit
+def _blocked_jit(texts: jnp.ndarray, lengths: jnp.ndarray, plans) -> jnp.ndarray:
+    """One fused dispatch: build the TextIndex AND run the blocklist check."""
+    return any_hit(build_index(texts, lengths), plans)
+
+
+def blocked(texts, lengths, plans) -> jnp.ndarray:
+    """bool[B] blocklist predicate over a padded (B, L) batch of documents."""
+    return _blocked_jit(jnp.asarray(texts), jnp.asarray(lengths), tuple(plans))

@@ -19,6 +19,12 @@ is the TPU idiom — documented as adaptation #6).
 All functions return ``mask: bool[n]`` with mask[i] True iff an occurrence of
 ``pattern`` starts at text position i.  Everything is jit-compatible; pattern
 length is static (part of the trace).
+
+This module is the single-(text, pattern) reference layer.  The hot path for
+multi-pattern / batched-text workloads is the explicit two-phase engine in
+``repro.core.engine`` (DESIGN.md §7): a TextIndex packs and fingerprints the
+text once, per-length-group PatternPlans carry the compiled pattern state,
+and ``match_many`` answers P patterns x B texts per device dispatch.
 """
 
 from __future__ import annotations

@@ -2,12 +2,21 @@
 "Fast multiple string matching using streaming SIMD extensions technology",
 SPIRE 2012 — reference [10] of the paper).
 
-Patterns of equal length are stacked into a (P, m) matrix and searched with a
-single vmapped packed scan; the text-side packing (pack_u32 / fingerprints)
-is pattern-independent so it is computed once and shared across all P
-patterns (vmap with in_axes=None on the text broadcasts it).
+Two layers live here:
 
-Used by the data pipeline for blocklist filtering (DESIGN.md §4).
+  * the *vmap baseline*: stack equal-length patterns into (P, m) and vmap
+    the single-pattern scan over them.  XLA shares the text-side packing
+    across the vmap, but every position still pays O(P) compare work.  Kept
+    as `find_multi_vmap` / `count_multi_vmap` — it is the benchmark baseline
+    and the semantic reference.
+
+  * the engine path (repro.core.engine): pack + fingerprint the text ONCE
+    (TextIndex), compile each length group ONCE (PatternPlan), and answer
+    all P patterns x B texts per device dispatch, with per-position filter
+    cost independent of P.  `find_multi`, `count_multi`, `contains_any`, and
+    `PatternSet` all route through it.
+
+Used by the data pipeline for blocklist filtering (DESIGN.md §4, §7).
 """
 
 from __future__ import annotations
@@ -19,15 +28,16 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core import epsm
+from repro.core import engine, epsm
 from repro.core.packing import as_u8
 
 
-def find_multi(text, patterns, *, algo: str = "auto") -> jnp.ndarray:
-    """Match-start masks for a (P, m) stack of equal-length patterns.
+# ---------------------------------------------------------------------------
+# vmap baseline (previous hot path; now the reference + benchmark baseline)
+# ---------------------------------------------------------------------------
 
-    Returns bool[P, n].
-    """
+def find_multi_vmap(text, patterns, *, algo: str = "auto") -> jnp.ndarray:
+    """Per-pattern vmapped scan: bool[P, n].  O(P * n) compare work."""
     t = as_u8(text)
     ps = as_u8(patterns)
     if ps.ndim != 2:
@@ -35,42 +45,84 @@ def find_multi(text, patterns, *, algo: str = "auto") -> jnp.ndarray:
     return jax.vmap(lambda p: epsm.find(t, p, algo=algo))(ps)
 
 
+def count_multi_vmap(text, patterns, *, algo: str = "auto") -> jnp.ndarray:
+    return find_multi_vmap(text, patterns, algo=algo).sum(axis=-1, dtype=jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# Engine-backed API
+# ---------------------------------------------------------------------------
+
+def _stack_plans(patterns):
+    ps = np.asarray(jax.device_get(as_u8(patterns)))
+    if ps.ndim != 2:
+        raise ValueError("patterns must be (P, m)")
+    return engine.compile_patterns_cached(list(ps))
+
+
+def find_multi(text, patterns, *, algo: str = "auto") -> jnp.ndarray:
+    """Match-start masks for a (P, m) stack of equal-length patterns.
+
+    Returns bool[P, n].  One shared-text dispatch via the engine; the plan
+    build is memoized on the pattern bytes.  NOT itself jit-traceable (plan
+    compilation is host-side) — inside jit, pre-compile plans and call
+    ``engine.match_many`` directly, as PatternSet and the serving engine do.
+    """
+    del algo  # regime is selected per length group by the engine
+    plans = _stack_plans(patterns)
+    idx = engine.build_index(as_u8(text))
+    return engine.match_many_jit(idx, plans)[0]
+
+
 def count_multi(text, patterns, *, algo: str = "auto") -> jnp.ndarray:
-    return find_multi(text, patterns, algo=algo).sum(axis=-1, dtype=jnp.int32)
+    del algo
+    plans = _stack_plans(patterns)
+    idx = engine.build_index(as_u8(text))
+    return engine.count_many_jit(idx, plans)[0]
 
 
 def contains_any(text, patterns, *, algo: str = "auto") -> jnp.ndarray:
     """Scalar bool: does any of the stacked patterns occur in text?"""
-    return find_multi(text, patterns, algo=algo).any()
+    del algo
+    plans = _stack_plans(patterns)
+    idx = engine.build_index(as_u8(text))
+    return engine.count_many_jit(idx, plans).sum() > 0
 
 
 class PatternSet:
     """Blocklist over patterns of arbitrary (mixed) lengths.
 
-    Groups patterns by length so each group becomes one stacked packed scan.
-    This is the object the data pipeline holds on to.
+    Compiles every length group into a PatternPlan ONCE at construction; all
+    queries afterwards are single engine dispatches over all groups at once
+    (the seed implementation issued one dispatch per length group).  This is
+    the object the data pipeline holds on to.
     """
 
     def __init__(self, patterns: Sequence):
-        groups: dict[int, list[np.ndarray]] = {}
-        for p in patterns:
-            arr = np.asarray(jax.device_get(as_u8(p)))
-            if arr.size == 0:
-                raise ValueError("empty pattern in PatternSet")
-            groups.setdefault(arr.size, []).append(arr)
-        self.groups = {
-            m: jnp.asarray(np.stack(ps)) for m, ps in sorted(groups.items())
-        }
+        if not patterns:
+            raise ValueError("empty PatternSet")
+        self.plans = engine.compile_patterns(patterns)
+        self.order = engine.plan_order(self.plans)
+        # group-major (seed-compatible) order of the original patterns
+        self.groups = {p.m: p.patterns for p in self.plans}
+
+    def index(self, text_or_batch, lengths=None) -> engine.TextIndex:
+        return engine.build_index(text_or_batch, lengths)
 
     def contains_any(self, text) -> jnp.ndarray:
-        t = as_u8(text)
-        hit = jnp.asarray(False)
-        for stack in self.groups.values():
-            hit = hit | contains_any(t, stack)
-        return hit
+        """Scalar bool for a single text (seed API)."""
+        idx = engine.build_index(as_u8(text))
+        return engine.count_many_jit(idx, self.plans).sum() > 0
+
+    def blocked(self, texts, lengths=None) -> jnp.ndarray:
+        """bool[B] blocklist verdicts for a padded (B, L) document batch —
+        one fused device dispatch for the whole batch x all patterns."""
+        if lengths is None:
+            idx = engine.build_index(texts)
+            return engine.count_many_jit(idx, self.plans).sum(-1) > 0
+        return engine.blocked(texts, lengths, self.plans)
 
     def count_each(self, text) -> jnp.ndarray:
         """Concatenated per-pattern occurrence counts (group order)."""
-        t = as_u8(text)
-        counts = [count_multi(t, stack) for stack in self.groups.values()]
-        return jnp.concatenate(counts) if counts else jnp.zeros((0,), jnp.int32)
+        idx = engine.build_index(as_u8(text))
+        return engine.count_many_jit(idx, self.plans)[0]

@@ -1,10 +1,18 @@
 """Byte-level LM data pipeline with the paper's technique as a first-class
 stage: EPSM multi-pattern blocklist filtering and fingerprint near-dup
-detection run over every document before batching (DESIGN.md §4).
+detection run over every document before batching (DESIGN.md §4, §7).
 
-Documents -> [EPSM blocklist filter] -> [fingerprint dedup] -> pack into
-fixed-length token sequences -> (tokens, targets) batches.  Byte-level
+Documents -> [batched EPSM blocklist filter] -> [fingerprint dedup] -> pack
+into fixed-length token sequences -> (tokens, targets) batches.  Byte-level
 tokenization (vocab 256 + BOS) keeps the pipeline self-contained.
+
+The blocklist stage is batched on device: documents are collected into a
+padded (B, L) matrix (L bucketed to powers of two so jit re-traces stay
+bounded) and a single engine dispatch verdicts the whole batch against every
+blocklist pattern at once.  The seed pipeline dispatched once per document x
+length group — pure dispatch overhead at corpus scale.  Padding rows carry
+their true lengths, so patterns never match inside padding or across
+document boundaries.
 """
 
 from __future__ import annotations
@@ -22,6 +30,22 @@ from repro.core.packing import fingerprint_weights, hash_blocks
 
 BOS = 256  # byte-level vocab: 0..255 bytes + BOS
 VOCAB = 257
+
+# documents per blocklist dispatch; the last (ragged) batch is padded up to
+# this so the jitted filter sees one stable batch dimension
+FILTER_BATCH = 32
+# docs longer than this filter in their own singleton dispatch: one giant
+# document must not inflate the whole (B, L) batch matrix to B x its bucket
+MAX_FILTER_LEN = 1 << 18
+
+
+def _bucket_len(n: int, floor: int = 256) -> int:
+    """Round a document length up to a power-of-two bucket (bounds the
+    number of distinct (B, L) shapes the jitted filter compiles for)."""
+    L = floor
+    while L < n:
+        L *= 2
+    return L
 
 
 @dataclasses.dataclass
@@ -86,23 +110,59 @@ class LMDataPipeline:
         self.deduper = FingerprintDeduper() if dedup else None
         self.stats = PipelineStats()
         self._buffer = np.zeros(0, dtype=np.int32)
+        # ONE persistent generator: _fill breaks out mid-iteration, and a
+        # fresh generator per fill would drop the filtered docs still
+        # buffered inside the suspended batch loop
+        self._clean = self._clean_docs()
+
+    def _filtered_batches(self) -> Iterator[List[np.ndarray]]:
+        """Pull FILTER_BATCH docs, blocklist-filter them in ONE device call."""
+        while True:
+            docs: List[np.ndarray] = []
+            for doc in self.documents:
+                docs.append(np.asarray(doc, dtype=np.uint8).reshape(-1))
+                if len(docs) >= FILTER_BATCH:
+                    break
+            if not docs:
+                return
+            self.stats.docs_in += len(docs)
+            if self.pattern_set is None:
+                yield docs
+                continue
+            small = [i for i, d in enumerate(docs) if len(d) <= MAX_FILTER_LEN]
+            hit = np.zeros(len(docs), bool)
+            if small:
+                L = _bucket_len(max(len(docs[i]) for i in small))
+                mat = np.zeros((FILTER_BATCH, L), np.uint8)
+                lengths = np.zeros((FILTER_BATCH,), np.int32)
+                for row, i in enumerate(small):
+                    mat[row, : len(docs[i])] = docs[i]
+                    lengths[row] = len(docs[i])
+                verdict = np.asarray(
+                    jax.device_get(self.pattern_set.blocked(mat, lengths))
+                )
+                hit[small] = verdict[: len(small)]
+            for i, d in enumerate(docs):
+                if len(d) > MAX_FILTER_LEN:
+                    # oversize: own dispatch, no batch-wide padding blowup
+                    hit[i] = bool(self.pattern_set.contains_any(d))
+            kept = [d for d, h in zip(docs, hit) if not h]
+            self.stats.docs_blocked += len(docs) - len(kept)
+            yield kept
 
     def _clean_docs(self) -> Iterator[np.ndarray]:
-        for doc in self.documents:
-            self.stats.docs_in += 1
-            if self.pattern_set is not None and bool(self.pattern_set.contains_any(doc)):
-                self.stats.docs_blocked += 1
-                continue
-            if self.deduper is not None and self.deduper.is_duplicate(doc):
-                self.stats.docs_deduped += 1
-                continue
-            self.stats.docs_out += 1
-            yield doc
+        for batch in self._filtered_batches():
+            for doc in batch:
+                if self.deduper is not None and self.deduper.is_duplicate(doc):
+                    self.stats.docs_deduped += 1
+                    continue
+                self.stats.docs_out += 1
+                yield doc
 
     def _fill(self, need: int):
         chunks = [self._buffer]
         have = len(self._buffer)
-        for doc in self._clean_docs():
+        for doc in self._clean:
             tok = np.concatenate([[BOS], doc.astype(np.int32)])
             chunks.append(tok)
             have += len(tok)

@@ -1,0 +1,52 @@
+"""Version shims for jax APIs that moved between releases.
+
+`jax.shard_map` (with its `check_vma` flag) only exists on newer jax; on the
+0.4.x line the implementation lives in `jax.experimental.shard_map` and the
+replication check is spelled `check_rep`.  Everything in this repo goes
+through this wrapper so the call sites stay written against the new API.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
+    """`jax.shard_map` with graceful fallback to jax.experimental.shard_map."""
+    if hasattr(jax, "shard_map"):
+        try:
+            return jax.shard_map(
+                f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                check_vma=check_vma,
+            )
+        except TypeError:  # newer-but-not-newest jax: flag still called check_rep
+            return jax.shard_map(
+                f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                check_rep=check_vma,
+            )
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    return _shard_map(
+        f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_rep=check_vma
+    )
+
+
+def axis_size(axis_name) -> int:
+    """`lax.axis_size` inside shard_map/pmap bodies, on any jax version.
+
+    On jax without `lax.axis_size`, `lax.psum(1, name)` folds to the static
+    axis size (a Python int), which is what the ppermute builders need."""
+    from jax import lax
+
+    if hasattr(lax, "axis_size"):
+        return lax.axis_size(axis_name)
+    return lax.psum(1, axis_name)
+
+
+def cost_analysis_dict(compiled) -> dict:
+    """`compiled.cost_analysis()` returns a per-partition list on jax 0.4.x
+    and a flat dict on newer jax; normalize to a dict (first partition)."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return ca or {}

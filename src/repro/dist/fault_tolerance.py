@@ -1,0 +1,103 @@
+"""Fault tolerance for long training runs: injected faults (restart tests),
+a per-step straggler watchdog, and the abort signal it raises.
+
+The watchdog keeps a rolling window of recent step durations and flags a step
+as a straggler when it exceeds ``factor`` x the rolling median.  What happens
+then is the ``policy``:
+
+  * ``"log"``        — record the event, keep going (production default:
+                       stragglers are noted for the capacity dashboard).
+  * ``"checkpoint"`` — record the event and tell the training loop to cut a
+                       checkpoint now (pre-emption is probably imminent).
+  * ``"raise"``      — raise :class:`StragglerAbort` so a supervisor can
+                       reschedule the job (used by the elastic tests).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import statistics
+import time
+from typing import List, Optional
+
+
+class InjectedFault(RuntimeError):
+    """Simulated node failure, raised mid-run by tests/launchers."""
+
+
+class StragglerAbort(RuntimeError):
+    """Raised by StepWatchdog(policy="raise") when a step stalls."""
+
+
+@dataclasses.dataclass
+class StragglerEvent:
+    step: int
+    duration_s: float
+    median_s: float
+    factor: float
+
+
+class StepWatchdog:
+    """Detect steps that run anomalously long vs the rolling median.
+
+    Usage::
+
+        wd = StepWatchdog(factor=3.0, policy="log")
+        wd.start_step(step)
+        ...run the step...
+        action = wd.end_step()   # policy string if straggling, else None
+    """
+
+    def __init__(
+        self,
+        factor: float = 3.0,
+        policy: str = "log",
+        window: int = 64,
+        min_history: int = 3,
+        min_duration_s: float = 1e-4,
+    ):
+        if policy not in ("log", "checkpoint", "raise"):
+            raise ValueError(f"unknown watchdog policy {policy!r}")
+        self.factor = factor
+        self.policy = policy
+        self.window = window
+        self.min_history = min_history
+        self.min_duration_s = min_duration_s
+        self.events: List[StragglerEvent] = []
+        self._durations: List[float] = []
+        self._step: Optional[int] = None
+        self._t0: Optional[float] = None
+
+    def start_step(self, step: int) -> None:
+        self._step = step
+        self._t0 = time.perf_counter()
+
+    def end_step(self) -> Optional[str]:
+        if self._t0 is None:
+            raise RuntimeError("end_step() without start_step()")
+        dur = time.perf_counter() - self._t0
+        step = self._step
+        self._t0 = None
+        straggler = False
+        if len(self._durations) >= self.min_history:
+            med = statistics.median(self._durations)
+            if dur > max(self.factor * med, self.min_duration_s):
+                straggler = True
+                self.events.append(
+                    StragglerEvent(
+                        step=int(step), duration_s=dur, median_s=med,
+                        factor=dur / max(med, 1e-12),
+                    )
+                )
+        if not straggler:
+            # stragglers don't pollute the baseline window
+            self._durations.append(dur)
+            if len(self._durations) > self.window:
+                self._durations = self._durations[-self.window :]
+            return None
+        if self.policy == "raise":
+            raise StragglerAbort(
+                f"step {step} took {dur * 1e3:.1f}ms "
+                f"(median {statistics.median(self._durations) * 1e3:.1f}ms)"
+            )
+        return self.policy

@@ -1,0 +1,275 @@
+"""Sharding strategy tables: PartitionSpec trees for params, optimizer state,
+activations, and input batches of all three model families.
+
+Everything here is *spec* construction — pure functions from (config, mesh,
+strategy) to PartitionSpec pytrees.  The launchers turn the specs into
+NamedShardings; models receive activation constraints through the
+``constrain(x, name)`` callback built by :func:`make_constrain`.
+
+Conventions:
+
+  * the "model" mesh axis carries tensor parallelism; every other axis is
+    data parallelism (:func:`dp_axes` flattens them);
+  * a dim is only sharded when the axis size divides it — otherwise the spec
+    silently degrades to replicated on that dim, so the same strategy table
+    works on the 16x16 production mesh and a 1-device laptop mesh;
+  * LM strategies: ``"tp_sp"`` (Megatron-style tensor parallel + sequence
+    parallel residuals), ``"zero_dp"`` (params/optimizer sharded over the dp
+    axes, ZeRO-ish); GNN strategies: ``"nodes_sharded"`` / ``"nodes_replicated"``.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.train.optimizer import AdamWState
+
+AxisNames = Union[str, Tuple[str, ...], None]
+
+
+# ---------------------------------------------------------------------------
+# Mesh helpers
+# ---------------------------------------------------------------------------
+
+def all_axes(mesh) -> Tuple[str, ...]:
+    return tuple(mesh.axis_names)
+
+
+def axis_size(mesh, axes: AxisNames) -> int:
+    """Product of the named mesh axis sizes (1 for absent/None axes)."""
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    size = 1
+    for a in axes:
+        if a in mesh.axis_names:
+            size *= mesh.shape[a]
+    return size
+
+
+def dp_axes(mesh) -> AxisNames:
+    """The data-parallel axes: every mesh axis except "model"."""
+    dp = tuple(a for a in mesh.axis_names if a != "model")
+    if not dp:
+        return None
+    return dp[0] if len(dp) == 1 else dp
+
+
+def _axis_if(mesh, axes: AxisNames, dim: int) -> AxisNames:
+    """`axes` if its total size divides `dim`, else None (replicate)."""
+    if axes is None:
+        return None
+    return axes if dim % axis_size(mesh, axes) == 0 else None
+
+
+def tree_to_shardings(mesh, spec_tree):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Activation constraints
+# ---------------------------------------------------------------------------
+
+def make_constrain(mesh, table: dict):
+    """Build the `constrain(x, name)` callback models thread through.
+
+    Unknown names and rank-mismatched specs pass through untouched, so one
+    table can serve several step functions (train/prefill/decode share names).
+    """
+
+    def constrain(x, name):
+        spec = table.get(name)
+        if spec is None or len(spec) != getattr(x, "ndim", -1):
+            return x
+        return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+    return constrain
+
+
+# ---------------------------------------------------------------------------
+# LM family
+# ---------------------------------------------------------------------------
+
+def _leaf_name(path) -> str:
+    for entry in reversed(path):
+        key = getattr(entry, "key", None)
+        if isinstance(key, str):
+            return key
+    return ""
+
+
+def _path_has(path, name: str) -> bool:
+    return any(getattr(entry, "key", None) == name for entry in path)
+
+
+def lm_param_specs(cfg, mesh, strategy: str = "tp_sp"):
+    """PartitionSpec tree matching transformer.param_shapes(cfg).
+
+    tp_sp: column-shard the QKV/up projections and row-shard the out/down
+    projections over "model" (Megatron); embeddings vocab-sharded.
+    zero_dp: shard the largest divisible non-stack dim over the dp axes.
+    """
+    from repro.models import transformer as tf_mod
+
+    sds = tf_mod.param_shapes(cfg)
+    dp = dp_axes(mesh)
+
+    col = {"wq", "wk", "wv", "w1", "w3"}       # output-feature sharded
+    row = {"wo", "w2"}                          # input-feature sharded
+
+    def tp_spec(path, leaf):
+        name = _leaf_name(path)
+        shape = leaf.shape
+        stacked = _path_has(path, "layers")     # leading n_layers scan dim
+        base = 1 if stacked else 0
+        spec = [None] * len(shape)
+        if name in col and len(shape) - base == 2:
+            spec[-1] = _axis_if(mesh, "model", shape[-1])
+        elif name in row and len(shape) - base == 2:
+            spec[-2] = _axis_if(mesh, "model", shape[-2])
+        elif name == "embed":
+            spec[0] = _axis_if(mesh, "model", shape[0])
+        elif name == "unembed":
+            spec[-1] = _axis_if(mesh, "model", shape[-1])
+        elif _path_has(path, "moe") and len(shape) - base >= 2:
+            # expert-stacked weights: shard the expert dim over "model"
+            spec[base] = _axis_if(mesh, "model", shape[base])
+        return P(*spec)
+
+    def zero_spec(path, leaf):
+        shape = leaf.shape
+        stacked = _path_has(path, "layers")
+        base = 1 if stacked else 0
+        spec = [None] * len(shape)
+        # largest divisible dim (excluding the scan-stack dim) goes to dp
+        cands = sorted(range(base, len(shape)), key=lambda i: -shape[i])
+        for i in cands:
+            if _axis_if(mesh, dp, shape[i]) is not None:
+                spec[i] = dp
+                break
+        return P(*spec)
+
+    fn = zero_spec if strategy == "zero_dp" else tp_spec
+    return jax.tree_util.tree_map_with_path(fn, sds)
+
+
+def lm_activation_table(cfg, mesh, kind: str, B: int, strategy: str = "tp_sp"):
+    """name -> PartitionSpec for the constrain() names used by models/transformer."""
+    del kind
+    dp = dp_axes(mesh)
+    bdp = _axis_if(mesh, dp, B)
+    mdl_heads = _axis_if(mesh, "model", cfg.n_heads)
+    mdl_kv = _axis_if(mesh, "model", cfg.n_kv_heads)
+    mdl_ff = _axis_if(mesh, "model", cfg.d_ff)
+    mdl_vocab = _axis_if(mesh, "model", cfg.vocab)
+    if strategy == "zero_dp":
+        # params live on dp; activations stay batch-sharded only
+        mdl_heads = mdl_kv = mdl_ff = mdl_vocab = None
+    return {
+        "residual": P(bdp, None, None),                  # (B, S, d)
+        "qkv": P(bdp, None, mdl_heads, None),            # (B, S, H, hd)
+        "kv_attn": P(bdp, None, mdl_kv, None),           # (B, S, KV, hd)
+        "ffn_hidden": P(bdp, None, mdl_ff),              # (B, S, f)
+        "moe_in": P(bdp, None, None),                    # (B, S, d)
+        "logits": P(bdp, None, mdl_vocab),               # (B, chunk, V)
+        "kv_cache": P(bdp, None, mdl_kv, None),          # (B, S, KV, hd)
+        "kv_cache_l": P(bdp, None, mdl_kv, None),        # (B, Smax, KV, hd)
+        "kv_cache_scale": P(bdp, None, mdl_kv),          # (B, Smax, KV)
+    }
+
+
+def lm_batch_specs(kind: str, mesh, B: int, strategy: str = "tp_sp"):
+    del strategy
+    dp = dp_axes(mesh)
+    bdp = _axis_if(mesh, dp, B)
+    if kind == "lm_train":
+        return {"tokens": P(bdp, None), "targets": P(bdp, None)}
+    if kind == "lm_prefill":
+        return {"tokens": P(bdp, None)}
+    if kind == "lm_decode":
+        # kcache/vcache are (L, B, Smax, KV, hd)
+        return {
+            "token": P(bdp, None),
+            "kcache": P(None, bdp, None, None, None),
+        }
+    raise ValueError(f"unknown LM kind {kind!r}")
+
+
+def opt_state_specs(param_specs) -> AdamWState:
+    """AdamW state shards exactly like its params (fp32 moments, ZeRO-1)."""
+    return AdamWState(step=P(), m=param_specs, v=param_specs)
+
+
+# ---------------------------------------------------------------------------
+# GNN family
+# ---------------------------------------------------------------------------
+
+def gnn_param_specs(param_sds):
+    """GatedGCN params are tiny (d_hidden ~ 70): replicate everything."""
+    return jax.tree_util.tree_map(lambda _: P(), param_sds)
+
+
+def gnn_activation_table(mesh, strategy: str = "nodes_sharded"):
+    if strategy == "nodes_replicated":
+        return {}
+    ax = all_axes(mesh)
+    axes = ax[0] if len(ax) == 1 else ax
+    return {"nodes": P(axes, None), "edges": P(axes, None)}
+
+
+def gnn_batch_specs(mesh, batch_sds):
+    ax = all_axes(mesh)
+    axes = ax[0] if len(ax) == 1 else ax
+
+    def spec(path, leaf):
+        name = _leaf_name(path)
+        shape = leaf.shape
+        if name == "edges":  # (2, E) edge index
+            return P(None, _axis_if(mesh, axes, shape[1]))
+        if name in ("graph_targets",):
+            return P()
+        first = _axis_if(mesh, axes, shape[0]) if shape else None
+        return P(first, *([None] * (len(shape) - 1))) if shape else P()
+
+    return jax.tree_util.tree_map_with_path(spec, batch_sds)
+
+
+# ---------------------------------------------------------------------------
+# RecSys family
+# ---------------------------------------------------------------------------
+
+def recsys_param_specs(cfg, mesh, param_sds):
+    """Row-shard the big embedding tables over "model"; replicate the dense
+    towers (they are MBs at most)."""
+    del cfg
+
+    def spec(path, leaf):
+        shape = leaf.shape
+        if (
+            _path_has(path, "tables")
+            or _leaf_name(path) in ("item_table", "cate_table")
+        ) and len(shape) == 2 and shape[0] >= 1024:
+            return P(_axis_if(mesh, "model", shape[0]), None)
+        return P(*([None] * len(shape)))
+
+    return jax.tree_util.tree_map_with_path(spec, param_sds)
+
+
+def recsys_batch_specs(mesh, batch_sds):
+    dp = dp_axes(mesh)
+
+    def spec(leaf):
+        shape = leaf.shape
+        if not shape:
+            return P()
+        return P(_axis_if(mesh, dp, shape[0]), *([None] * (len(shape) - 1)))
+
+    return jax.tree_util.tree_map(spec, batch_sds)

@@ -1,2 +1,2 @@
-from repro.kernels.multipattern.ops import multipattern
-from repro.kernels.multipattern.ref import multipattern_ref
+from repro.kernels.multipattern.ops import multipattern, multipattern_batched
+from repro.kernels.multipattern.ref import multipattern_batched_ref, multipattern_ref

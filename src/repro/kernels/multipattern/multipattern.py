@@ -1,10 +1,24 @@
-"""Multi-pattern EPSMb Pallas kernel: P same-length patterns in ONE pass.
+"""Multi-pattern EPSMb Pallas kernel: P same-length patterns in ONE pass,
+batched over B texts.
 
 The paper's companion work (Faro & Kulekci, SPIRE 2012 — reference [10])
 extends packed matching to pattern sets.  On TPU the win is bandwidth: the
 text tile is staged into VMEM and packed into int32 4-gram lanes ONCE, then
 all P anchors compare against the same packed registers — P-fold reuse of
 the HBM->VMEM traffic that dominates the single-pattern kernel.
+
+This kernel mirrors the core engine's semantics (core/engine.py, DESIGN.md
+§7) at the tile level:
+
+  * grid (B, ntiles): one program per (text row, tile) — a whole batch of
+    texts is matched in one pallas_call;
+  * shared-LUT fingerprint path: the tile computes the same per-position
+    window fingerprint as the engine and probes the union 2^k LUT staged in
+    VMEM.  A candidate-free tile (the common case at density P/2^k) skips
+    anchor verification entirely — a whole-tile branch via pl.when, no
+    per-lane divergence;
+  * candidate tiles verify with the stacked packed anchor words, exactly the
+    engine's _dense_b compare.
 """
 
 from __future__ import annotations
@@ -15,60 +29,104 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.core.engine import _FP_MULT, _WORD_SALTS, _word_offsets
+
 DEFAULT_TILE = 4096
 PACK = 4
 
 
-def _mp_kernel(cur_ref, nxt_ref, pats_ref, out_ref, *, n_pat: int, m: int, tile: int):
-    full = jnp.concatenate([cur_ref[...], nxt_ref[...]])  # (2*tile,) uint8
-    b = full.astype(jnp.uint32)
-    # pack the text ONCE; every pattern reuses these registers
-    packs = {}
-    j = 0
-    while j + PACK <= m:
-        w = b[j : j + tile]
-        w = w | (b[j + 1 : j + 1 + tile] << 8)
-        w = w | (b[j + 2 : j + 2 + tile] << 16)
-        w = w | (b[j + 3 : j + 3 + tile] << 24)
-        packs[j] = w
-        j += PACK
-    tail_start = j
+def _pack_words(b32, tile: int, m: int):
+    """Packed u32 word starting at every in-tile position, per anchor offset.
 
-    for pi in range(n_pat):  # static unroll over the pattern set
-        pat = pats_ref[pi, :].astype(jnp.uint32)
+    b32 is the (2*tile,) halo'd uint8 tile as uint32; returns {offset: (tile,)}.
+    """
+    words = {}
+    for o in _word_offsets(m):
+        w = b32[o : o + tile]
+        w = w | (b32[o + 1 : o + 1 + tile] << 8)
+        w = w | (b32[o + 2 : o + 2 + tile] << 16)
+        w = w | (b32[o + 3 : o + 3 + tile] << 24)
+        words[o] = w
+    return words
 
-        def pat_word(jj):
-            return pat[jj] | (pat[jj + 1] << 8) | (pat[jj + 2] << 16) | (pat[jj + 3] << 24)
 
-        acc = packs[0] == pat_word(0)
-        jj = PACK
-        while jj + PACK <= m:
-            acc = acc & (packs[jj] == pat_word(jj))
-            jj += PACK
-        for t in range(tail_start, m):
-            acc = acc & (full[t : t + tile] == pats_ref[pi, t])
-        out_ref[pi, :] = acc.astype(jnp.uint8)
+def _mp_kernel(
+    cur_ref, nxt_ref, pats_ref, lut_ref, out_ref, *, n_pat: int, m: int,
+    tile: int, kbits: int, use_lut: bool,
+):
+    full = jnp.concatenate([cur_ref[0], nxt_ref[0]])  # (2*tile,) uint8
+    b32 = full.astype(jnp.uint32)
+    # pack the text ONCE; the fingerprint and every pattern reuse these
+    words = _pack_words(b32, tile, m)
+    offsets = _word_offsets(m)
+
+    if use_lut:
+        # shared-LUT fingerprint (EPSMb regime only — the window fingerprint
+        # mixes the packed words exactly like core/engine.py, so only plans
+        # whose lut_any is keyed that way may gate the tile): one probe
+        # answers "any pattern here?" for all P
+        v = jnp.zeros((tile,), jnp.uint32)
+        for i, o in enumerate(offsets):
+            v = v + words[o] * jnp.uint32(int(_WORD_SALTS[i]))
+        h = ((v * jnp.uint32(int(_FP_MULT))) >> jnp.uint32(32 - kbits)).astype(
+            jnp.int32
+        )
+        cand = lut_ref[h]  # (tile,) bool
+    else:
+        cand = jnp.ones((tile,), jnp.bool_)
+
+    out_ref[0, :, :] = jnp.zeros((n_pat, tile), jnp.uint8)
+
+    @pl.when(cand.any())
+    def _verify():
+        for pi in range(n_pat):  # static unroll over the pattern set
+            pat = pats_ref[pi, :].astype(jnp.uint32)
+
+            def pat_word(jj):
+                return (
+                    pat[jj]
+                    | (pat[jj + 1] << 8)
+                    | (pat[jj + 2] << 16)
+                    | (pat[jj + 3] << 24)
+                )
+
+            acc = cand
+            for o in offsets:
+                acc = acc & (words[o] == pat_word(o))
+            out_ref[0, pi, :] = acc.astype(jnp.uint8)
 
 
 def multipattern_pallas(
-    text_padded: jnp.ndarray,
-    patterns: jnp.ndarray,  # (P, m) uint8
+    text_padded: jnp.ndarray,  # (B, (ntiles + 1) * tile) uint8
+    patterns: jnp.ndarray,     # (P, m) uint8
+    lut: jnp.ndarray,          # (2^kbits,) bool union fingerprint table
     *,
+    kbits: int,
     tile: int = DEFAULT_TILE,
     interpret: bool = True,
+    use_lut: bool = True,
 ) -> jnp.ndarray:
+    """Batched grid (B, ntiles) -> uint8 (B, P, ntiles * tile) masks.
+
+    ``use_lut=False`` skips the fingerprint gate and verifies every tile —
+    required for m >= 16, where the compiled plan's LUT is keyed by block
+    fingerprints the kernel does not compute."""
     n_pat, m = patterns.shape
-    ntiles = text_padded.shape[0] // tile - 1
-    kernel = functools.partial(_mp_kernel, n_pat=n_pat, m=m, tile=tile)
+    B = text_padded.shape[0]
+    ntiles = text_padded.shape[1] // tile - 1
+    kernel = functools.partial(
+        _mp_kernel, n_pat=n_pat, m=m, tile=tile, kbits=kbits, use_lut=use_lut
+    )
     return pl.pallas_call(
         kernel,
-        grid=(ntiles,),
+        grid=(B, ntiles),
         in_specs=[
-            pl.BlockSpec((tile,), lambda i: (i,)),
-            pl.BlockSpec((tile,), lambda i: (i + 1,)),
-            pl.BlockSpec((n_pat, m), lambda i: (0, 0)),
+            pl.BlockSpec((1, tile), lambda b, i: (b, i)),
+            pl.BlockSpec((1, tile), lambda b, i: (b, i + 1)),
+            pl.BlockSpec((n_pat, m), lambda b, i: (0, 0)),
+            pl.BlockSpec((lut.shape[0],), lambda b, i: (0,)),
         ],
-        out_specs=pl.BlockSpec((n_pat, tile), lambda i: (0, i)),
-        out_shape=jax.ShapeDtypeStruct((n_pat, ntiles * tile), jnp.uint8),
+        out_specs=pl.BlockSpec((1, n_pat, tile), lambda b, i: (b, 0, i)),
+        out_shape=jax.ShapeDtypeStruct((B, n_pat, ntiles * tile), jnp.uint8),
         interpret=interpret,
-    )(text_padded, text_padded, patterns)
+    )(text_padded, text_padded, patterns, lut)

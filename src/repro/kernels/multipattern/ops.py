@@ -1,4 +1,4 @@
-"""jit'd public wrapper around the multi-pattern Pallas kernel."""
+"""jit'd public wrappers around the batched multi-pattern Pallas kernel."""
 
 from __future__ import annotations
 
@@ -7,23 +7,40 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.core.packing import PACK, as_u8, valid_start_mask
+from repro.core.engine import compile_patterns_cached
+from repro.core.packing import PACK, as_u8
 from repro.kernels.multipattern.multipattern import DEFAULT_TILE, multipattern_pallas
 
 
-@functools.partial(jax.jit, static_argnames=("tile", "interpret"))
-def _run(text, patterns, *, tile, interpret):
-    n = text.shape[0]
+@functools.partial(jax.jit, static_argnames=("tile", "interpret", "kbits", "use_lut"))
+def _run(texts, lengths, patterns, lut, *, tile, interpret, kbits, use_lut):
+    B, n = texts.shape
     m = patterns.shape[1]
     ntiles = max(1, -(-n // tile))
-    padded = jnp.zeros(((ntiles + 1) * tile,), jnp.uint8).at[:n].set(text)
-    masks = multipattern_pallas(padded, patterns, tile=tile, interpret=interpret)
-    return masks[:, :n].astype(jnp.bool_) & valid_start_mask(n, m)[None, :]
+    padded = (
+        jnp.zeros((B, (ntiles + 1) * tile), jnp.uint8).at[:, :n].set(texts)
+    )
+    masks = multipattern_pallas(
+        padded, patterns, lut, kbits=kbits, tile=tile, interpret=interpret,
+        use_lut=use_lut,
+    )
+    valid = jnp.arange(n)[None, :] <= (lengths[:, None] - m)  # (B, n)
+    return masks[:, :, :n].astype(jnp.bool_) & valid[:, None, :]
 
 
-def multipattern(text, patterns, *, tile: int = DEFAULT_TILE, interpret: bool = True):
-    """(P, m) pattern stack -> bool (P, n) match-start masks; m >= 4."""
-    t = as_u8(text)
+def multipattern_batched(
+    texts, patterns, lengths=None, *, tile: int = DEFAULT_TILE,
+    interpret: bool = True,
+):
+    """(B, n) texts x (P, m) same-length patterns -> bool (B, P, n); m >= 4.
+
+    `lengths` gives per-row true lengths (matches never start in padding).
+    The union fingerprint LUT is compiled from the pattern stack, mirroring
+    the core engine's candidate gating in-kernel.
+    """
+    t = as_u8(texts)
+    if t.ndim == 1:
+        t = t[None, :]
     ps = as_u8(patterns)
     if ps.ndim != 2:
         raise ValueError("patterns must be (P, m)")
@@ -31,6 +48,38 @@ def multipattern(text, patterns, *, tile: int = DEFAULT_TILE, interpret: bool = 
         raise ValueError("multipattern kernel requires m >= 4")
     if ps.shape[1] > tile:
         raise ValueError("pattern longer than tile")
+    B, n = t.shape
+    if lengths is None:
+        lengths = jnp.full((B,), n, jnp.int32)
+    lengths = jnp.asarray(lengths, jnp.int32)
+    if n == 0:
+        return jnp.zeros((B, ps.shape[0], 0), jnp.bool_)
+    # one plan group (same-length stack => row order is preserved): reuse
+    # the engine's LUT compiler so kernel and core share one fingerprint.
+    # Only EPSMb-regime plans key their LUT by the window fingerprint the
+    # kernel computes; for m >= 16 (block-fingerprint LUT) the gate is
+    # disabled and every tile verifies.
+    plans = compile_patterns_cached(list(jax.device_get(ps)))
+    assert len(plans) == 1 and plans[0].ids == tuple(range(ps.shape[0]))
+    plan = plans[0]
+    return _run(
+        t, lengths, plan.patterns, plan.lut_any,
+        tile=tile, interpret=interpret, kbits=plan.kbits,
+        use_lut=plan.regime == "b",
+    )
+
+
+def multipattern(text, patterns, *, tile: int = DEFAULT_TILE, interpret: bool = True):
+    """(P, m) pattern stack -> bool (P, n) match-start masks; m >= 4.
+
+    Single-text convenience wrapper over the batched kernel (seed API).
+    """
+    t = as_u8(text)
+    if t.ndim != 1:
+        raise ValueError("text must be 1-D; use multipattern_batched")
+    ps = as_u8(patterns)
+    if ps.ndim != 2:
+        raise ValueError("patterns must be (P, m)")
     if t.shape[0] == 0:
         return jnp.zeros((ps.shape[0], 0), jnp.bool_)
-    return _run(t, ps, tile=tile, interpret=interpret)
+    return multipattern_batched(t[None, :], ps, tile=tile, interpret=interpret)[0]

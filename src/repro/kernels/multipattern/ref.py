@@ -1,4 +1,5 @@
-"""Pure-jnp oracle: vmap of the single-pattern EPSMb reference."""
+"""Pure-jnp oracles: vmap of the single-pattern EPSMb reference, single-text
+and batched (B texts x P patterns)."""
 
 from __future__ import annotations
 
@@ -12,3 +13,18 @@ from repro.kernels.epsmb.ref import epsmb_ref
 def multipattern_ref(text, patterns) -> jnp.ndarray:
     t, ps = as_u8(text), as_u8(patterns)
     return jax.vmap(lambda p: epsmb_ref(t, p))(ps)
+
+
+def multipattern_batched_ref(texts, patterns, lengths=None) -> jnp.ndarray:
+    """bool (B, P, n) oracle with per-row valid-start masking."""
+    ts, ps = as_u8(texts), as_u8(patterns)
+    if ts.ndim == 1:
+        ts = ts[None, :]
+    B, n = ts.shape
+    m = ps.shape[1]
+    out = jax.vmap(lambda t: multipattern_ref(t, ps))(ts)
+    if lengths is None:
+        return out
+    lengths = jnp.asarray(lengths, jnp.int32)
+    valid = jnp.arange(n)[None, :] <= (lengths[:, None] - m)
+    return out & valid[:, None, :]

@@ -19,9 +19,11 @@ def test_walker_matches_unrolled_hlo():
         h, _ = jax.lax.scan(body, x, None, length=16, unroll=16)
         return h
 
+    from repro.dist.compat import cost_analysis_dict
+
     args = (jax.ShapeDtypeStruct((128, 256), jnp.float32),
             jax.ShapeDtypeStruct((256, 256), jnp.float32))
-    hlo_flops = jax.jit(f).lower(*args).compile().cost_analysis()["flops"]
+    hlo_flops = cost_analysis_dict(jax.jit(f).lower(*args).compile())["flops"]
     est = step_cost(f, *args)
     assert abs(est["flops"] - hlo_flops) / hlo_flops < 0.05
 

@@ -130,6 +130,7 @@ def test_gradient_compression_accuracy():
     """int8+EF quantized psum ~= exact psum, and EF kills the bias over steps."""
     from jax.sharding import PartitionSpec as P
 
+    from repro.dist.compat import shard_map
     from repro.dist.compression import quantized_psum, zeros_residuals
 
     mesh = jax.make_mesh((1,), ("data",))
@@ -139,7 +140,7 @@ def test_gradient_compression_accuracy():
     def f(g, r):
         return quantized_psum(g, r, "data")
 
-    out, new_res = jax.shard_map(
+    out, new_res = shard_map(
         f, mesh=mesh, in_specs=(P(), P()), out_specs=(P(), P()), check_vma=False
     )(g, res)
     rel = np.abs(np.asarray(out["w"]) - np.asarray(g["w"])).max() / np.abs(
