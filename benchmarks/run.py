@@ -137,9 +137,72 @@ def bench_multipattern(size: int, outdir: Path):
             })
             _emit(name, dt * 1e6,
                   f"GBps_eff={size*npat/dt/1e9:.3f};speedup={speedup:.2f}x")
+    # experiments/benchmarks/ is the ONE canonical location for bench
+    # artifacts (the repo-root copy this used to also write is gone)
     (outdir / "BENCH_multipattern.json").write_text(json.dumps(rows, indent=1))
-    # repo-root copy: the perf-trajectory artifact future PRs diff against
-    Path("BENCH_multipattern.json").write_text(json.dumps(rows, indent=1))
+
+
+def bench_approx(size: int, outdir: Path):
+    """k-mismatch engine (repro.approx) vs the exact path, machine-readable.
+
+    Writes BENCH_approx.json rows {name, us_per_call, GBps, m, k,
+    ratio_vs_exact} for m in {4, 8, 16} x k in {0, 1, 2} over a `size`-byte
+    english corpus (per-pattern counts, the reduced hot path).  Counts are
+    cross-checked against the naive k-mismatch reference before timing."""
+    import json
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.approx import kmismatch_naive
+    from repro.core import engine as eng
+    from repro.data import corpus
+
+    def timeit(fn, *a, reps=7):
+        jax.block_until_ready(fn(*a))
+        ts = []
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn(*a))
+            ts.append(time.perf_counter() - t0)
+        return float(np.median(ts))
+
+    text = corpus.make_corpus("english", size, seed=0)
+    tj = jnp.asarray(text)
+    rows = []
+    for m in (4, 8, 16):
+        pats = corpus.extract_patterns(text, m, 1, seed=5)
+        dt_exact = None
+        for k in (0, 1, 2):
+            plans = eng.compile_patterns(list(pats), k=k)
+            f = jax.jit(
+                lambda t, plans=plans, k=k: eng.count_many(
+                    eng.build_index(t), plans, k=k
+                )
+            )
+            want = int(kmismatch_naive(text, pats[0], k).sum())
+            got = int(np.asarray(f(tj))[0, 0])
+            assert got == want, f"approx/naive divergence m={m} k={k}"
+            dt = timeit(f, tj)
+            if k == 0:
+                dt_exact = dt
+            ratio = dt / dt_exact
+            rows.append({
+                "name": f"approx/m{m}/k{k}",
+                "us_per_call": dt * 1e6,
+                "GBps": size / dt / 1e9,
+                "m": m,
+                "k": k,
+                "P": 1,
+                "B": 1,
+                "size_bytes": size,
+                "occurrences": got,
+                "ratio_vs_exact": round(ratio, 3),
+                "relaxed_lut_compiled": plans[0].relaxed_lut is not None,
+            })
+            _emit(f"approx/m{m}/k{k}", dt * 1e6,
+                  f"GBps={size/dt/1e9:.3f};vs_exact={ratio:.2f}x")
+    (outdir / "BENCH_approx.json").write_text(json.dumps(rows, indent=1))
 
 
 def bench_pipeline(outdir: Path):
@@ -182,9 +245,11 @@ def main():
     print("name,us_per_call,derived")
     bench_paper_tables(size, args.full, outdir)
     bench_kernels(size, outdir)
-    # fixed 1 MB workload: BENCH_multipattern.json is the perf-trajectory
-    # artifact future PRs diff, so its shape must not depend on --size
+    # fixed 1 MB workload: BENCH_multipattern.json / BENCH_approx.json are
+    # the perf-trajectory artifacts future PRs diff, so their shape must
+    # not depend on --size
     bench_multipattern(1_000_000, outdir)
+    bench_approx(1_000_000, outdir)
     bench_pipeline(outdir)
     bench_roofline_report(outdir)
 

@@ -1,0 +1,55 @@
+"""repro.approx — packed k-mismatch approximate matching (DESIGN.md §8).
+
+Extends the repo's exact packed-matching substrate to Hamming-distance
+matching: a position i matches pattern p under budget k iff the m-byte
+window at i differs from p in at most k bytes.  Engine-integrated — the
+canonical entry points are ``engine.compile_patterns(..., k=...)`` plus
+``engine.match_many / count_many(..., k=...)``; this module adds the
+building blocks (packed counting filter, relaxed fingerprint LUT) and
+single-pattern conveniences mirroring ``epsm.find`` / ``epsm.count``.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+
+from repro.approx.counting import (  # noqa: F401
+    APPROX_CAND_BLOCK,
+    count_group_approx,
+    match_group_approx,
+    mismatch_counts,
+)
+from repro.approx.relaxed import relaxed_window_lut  # noqa: F401
+from repro.core import engine
+from repro.core.packing import as_u8
+
+
+def find_kmismatch(text, pattern, k: int):
+    """bool[n] k-mismatch match-start mask for one (text, pattern) pair."""
+    plans = engine.compile_patterns_cached([pattern], k=int(k))
+    idx = engine.build_index(as_u8(text))
+    return engine.match_many_jit(idx, plans, k=int(k))[0, 0]
+
+
+def count_kmismatch(text, pattern, k: int):
+    """Scalar int32 number of k-mismatch occurrences."""
+    plans = engine.compile_patterns_cached([pattern], k=int(k))
+    idx = engine.build_index(as_u8(text))
+    return engine.count_many_jit(idx, plans, k=int(k))[0, 0]
+
+
+def kmismatch_naive(text, pattern, k: int) -> np.ndarray:
+    """Vectorized-numpy oracle: bool[n] mask, the test/bench reference."""
+    t = np.asarray(jax.device_get(as_u8(text)))
+    p = np.asarray(jax.device_get(as_u8(pattern)))
+    n, m = t.shape[0], p.shape[0]
+    if n < m:
+        return np.zeros(n, bool)
+    mm = np.zeros(n - m + 1, np.int32)
+    for j in range(m):
+        mm += t[j : j + n - m + 1] != p[j]
+    out = np.zeros(n, bool)
+    out[: n - m + 1] = mm <= k
+    return out

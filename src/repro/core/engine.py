@@ -206,18 +206,27 @@ class PatternPlan:
     lut_pid: Optional[jnp.ndarray]   # (2^kbits,) int32 pattern-id payload (EPSMb)
     lut_bits: Optional[jnp.ndarray]  # (2^kbits, ceil(P/32)) uint32 payloads (EPSMc)
     hp: Optional[jnp.ndarray]        # (P, stride) int32 block fps (EPSMc)
+    # --- approximate matching (repro.approx, DESIGN.md §8) -----------------
+    k: int = 0               # static: mismatch budget the plan was compiled for
+    relaxed_lut: Optional[jnp.ndarray] = None  # (2^kbits,) bool <=k-reachable fps
+    relaxed_bits: int = 0    # static: set-bit count of relaxed_lut (budgeting)
 
     def tree_flatten(self):
         return (
             (self.patterns, self.anchors, self.lut_any, self.lut_pid,
-             self.lut_bits, self.hp),
-            (self.m, self.kbits, self.ids, self.distinct),
+             self.lut_bits, self.hp, self.relaxed_lut),
+            (self.m, self.kbits, self.ids, self.distinct, self.k,
+             self.relaxed_bits),
         )
 
     @classmethod
     def tree_unflatten(cls, aux, children):
-        m, kbits, ids, distinct = aux
-        return cls(m, kbits, ids, distinct, *children)
+        m, kbits, ids, distinct, k, relaxed_bits = aux
+        (patterns, anchors, lut_any, lut_pid, lut_bits, hp, relaxed) = children
+        return cls(
+            m, kbits, ids, distinct, patterns, anchors, lut_any, lut_pid,
+            lut_bits, hp, k=k, relaxed_lut=relaxed, relaxed_bits=relaxed_bits,
+        )
 
     @property
     def n_patterns(self) -> int:
@@ -233,13 +242,25 @@ class PatternPlan:
 
 
 def compile_patterns(
-    patterns: Sequence, *, kbits: int = ENGINE_KBITS, beta: int = EPSMC_BETA
+    patterns: Sequence,
+    *,
+    kbits: int = ENGINE_KBITS,
+    beta: int = EPSMC_BETA,
+    k: int = 0,
 ) -> Tuple[PatternPlan, ...]:
     """Group patterns by length and compile one PatternPlan per group.
 
     Returned plans are sorted by m; each plan's ``ids`` maps its rows back to
     positions in the input sequence (match_many output is plan-concatenated).
+
+    ``k`` is the mismatch budget the plans are compiled for (repro.approx,
+    DESIGN.md §8): plans additionally carry a host-expanded relaxed
+    fingerprint LUT covering every window fingerprint reachable under <= k
+    byte substitutions, so ``match_many(..., k=k)`` can keep the candidate
+    gate before verification.  k=0 plans are bit-identical to before.
     """
+    if k < 0:
+        raise ValueError("mismatch budget k must be >= 0")
     groups: dict = {}
     for i, p in enumerate(patterns):
         arr = np.asarray(jax.device_get(as_u8(p)))
@@ -287,6 +308,14 @@ def compile_patterns(
                 bit = np.uint32(1 << (p_i % 32))
                 lut_bits[hp[p_i], p_i // 32] |= bit
             lut_any[hp.reshape(-1)] = True
+        relaxed = None
+        relaxed_bits = 0
+        if k > 0:
+            from repro.approx.relaxed import relaxed_window_lut
+
+            relaxed = relaxed_window_lut(pats, kbits=kbits, k=k)
+            if relaxed is not None:
+                relaxed_bits = int(relaxed.sum())
         plans.append(
             PatternPlan(
                 m=m,
@@ -299,6 +328,9 @@ def compile_patterns(
                 lut_pid=None if lut_pid is None else jnp.asarray(lut_pid),
                 lut_bits=None if lut_bits is None else jnp.asarray(lut_bits),
                 hp=None if hp is None else jnp.asarray(hp),
+                k=k,
+                relaxed_lut=None if relaxed is None else jnp.asarray(relaxed),
+                relaxed_bits=relaxed_bits,
             )
         )
     return tuple(plans)
@@ -314,17 +346,22 @@ _PLAN_CACHE: dict = {}
 _PLAN_CACHE_MAX = 64
 
 
-def compile_patterns_cached(patterns: Sequence) -> Tuple[PatternPlan, ...]:
-    """compile_patterns with a small host-side memo keyed by pattern bytes.
+def compile_patterns_cached(
+    patterns: Sequence, *, k: int = 0
+) -> Tuple[PatternPlan, ...]:
+    """compile_patterns with a small host-side memo keyed by pattern bytes
+    (and the mismatch budget k).
 
-    The convenience wrappers (find_multi & co., the batched kernel) receive
+    The convenience wrappers (find_multi & co., the batched kernels) receive
     raw pattern stacks per call; without this, every call would pay the
     host-side plan build (2^17 LUT allocation + upload) that PatternSet
     amortizes by construction."""
-    key = tuple(bytes(np.asarray(jax.device_get(as_u8(p)))) for p in patterns)
+    key = (k,) + tuple(
+        bytes(np.asarray(jax.device_get(as_u8(p)))) for p in patterns
+    )
     plans = _PLAN_CACHE.get(key)
     if plans is None:
-        plans = compile_patterns(patterns)
+        plans = compile_patterns(patterns, k=k)
         if len(_PLAN_CACHE) >= _PLAN_CACHE_MAX:
             _PLAN_CACHE.pop(next(iter(_PLAN_CACHE)))
         _PLAN_CACHE[key] = plans
@@ -381,13 +418,19 @@ def _b_candidates(index: TextIndex, plan: PatternPlan):
     return blk_any, budget, nblk
 
 
-def _gather_candidate_rows(index: TextIndex, m: int, blk_any, budget, nblk):
+def _gather_candidate_rows(
+    index: TextIndex, m: int, blk_any, budget, nblk, cblock: int = CAND_BLOCK
+):
     """Shared sparse-path prelude: fixed-budget nonzero over candidate
     blocks, gather each block's C+m-1 bytes, re-pack them once.
 
+    ``cblock`` is the candidate-block granularity C (the exact paths use
+    CAND_BLOCK; the k-mismatch path uses a smaller block because its relaxed
+    LUT is denser — see repro.approx.counting).
+
     Returns (rows_packed (nb, C+m-1) u32, bvec (nb,), bstart (nb,), live)."""
     B, n = index.text.shape
-    C = CAND_BLOCK
+    C = cblock
     (flat,) = jnp.nonzero(blk_any.reshape(-1), size=budget, fill_value=B * nblk)
     live = flat < B * nblk
     flat = jnp.where(live, flat, 0)
@@ -607,40 +650,85 @@ _COUNT = {
 # Public joins: one dispatch for P patterns x B texts
 # ---------------------------------------------------------------------------
 
-def match_many(index: TextIndex, plans: Sequence[PatternPlan]) -> jnp.ndarray:
+def _effective_k(plan: PatternPlan, k: Optional[int]) -> int:
+    """Per-plan mismatch budget: an explicit k overrides; None means "what
+    the plan was compiled for" (0 for exact plans), so fuzzy-compiled plans
+    flow through existing call sites (serving, blocklist) unchanged."""
+    return plan.k if k is None else int(k)
+
+
+def match_many(
+    index: TextIndex, plans: Sequence[PatternPlan], *, k: Optional[int] = None
+) -> jnp.ndarray:
     """bool[B, P_total, n] match-start masks, rows in plan-concatenated order
-    (use :func:`plan_order` to map back to the original pattern order)."""
+    (use :func:`plan_order` to map back to the original pattern order).
+
+    ``k`` is the mismatch budget (repro.approx): mask[b, p, i] is True iff
+    the m-byte window at i differs from pattern p in at most k bytes.  k=0
+    (or exact-compiled plans with k=None) runs the exact matchers unchanged —
+    bit-identical to the pre-approx engine."""
     if not plans:
         return jnp.zeros((index.batch, 0, index.n), jnp.bool_)
-    return jnp.concatenate([_MATCH[p.regime](index, p) for p in plans], axis=1)
+    outs = []
+    for p in plans:
+        kk = _effective_k(p, k)
+        if kk == 0:
+            outs.append(_MATCH[p.regime](index, p))
+        else:
+            from repro.approx import counting
+
+            outs.append(counting.match_group_approx(index, p, kk))
+    return jnp.concatenate(outs, axis=1)
 
 
-def count_many(index: TextIndex, plans: Sequence[PatternPlan]) -> jnp.ndarray:
-    """int32[B, P_total] occurrence counts — the reduced hot path: never
-    materializes the (B, P, n) mask."""
+def count_many(
+    index: TextIndex, plans: Sequence[PatternPlan], *, k: Optional[int] = None
+) -> jnp.ndarray:
+    """int32[B, P_total] occurrence counts — the reduced hot path: the
+    exact and relaxed-gated paths never materialize the (B, P, n) mask.
+    ``k`` as in :func:`match_many`; note the k > 0 DENSE path (small P,
+    saturated or absent relaxed LUT, or candidate overflow) does build the
+    (B, P, n) mismatch mask before reducing."""
     if not plans:
         return jnp.zeros((index.batch, 0), jnp.int32)
-    return jnp.concatenate([_COUNT[p.regime](index, p) for p in plans], axis=1)
+    outs = []
+    for p in plans:
+        kk = _effective_k(p, k)
+        if kk == 0:
+            outs.append(_COUNT[p.regime](index, p))
+        else:
+            from repro.approx import counting
+
+            outs.append(counting.count_group_approx(index, p, kk))
+    return jnp.concatenate(outs, axis=1)
 
 
-def any_many(index: TextIndex, plans: Sequence[PatternPlan]) -> jnp.ndarray:
+def any_many(
+    index: TextIndex, plans: Sequence[PatternPlan], *, k: Optional[int] = None
+) -> jnp.ndarray:
     """bool[B, P_total] — does pattern p occur anywhere in text b?"""
-    return count_many(index, plans) > 0
+    return count_many(index, plans, k=k) > 0
 
 
-def any_hit(index: TextIndex, plans: Sequence[PatternPlan]) -> jnp.ndarray:
+def any_hit(
+    index: TextIndex, plans: Sequence[PatternPlan], *, k: Optional[int] = None
+) -> jnp.ndarray:
     """bool[B] — does ANY pattern occur in text b?  (blocklist predicate)"""
-    return any_many(index, plans).any(axis=-1)
+    return any_many(index, plans, k=k).any(axis=-1)
 
 
-@functools.partial(jax.jit, static_argnames=())
-def match_many_jit(index: TextIndex, plans: Tuple[PatternPlan, ...]) -> jnp.ndarray:
-    return match_many(index, plans)
+@functools.partial(jax.jit, static_argnames=("k",))
+def match_many_jit(
+    index: TextIndex, plans: Tuple[PatternPlan, ...], *, k: Optional[int] = None
+) -> jnp.ndarray:
+    return match_many(index, plans, k=k)
 
 
-@functools.partial(jax.jit, static_argnames=())
-def count_many_jit(index: TextIndex, plans: Tuple[PatternPlan, ...]) -> jnp.ndarray:
-    return count_many(index, plans)
+@functools.partial(jax.jit, static_argnames=("k",))
+def count_many_jit(
+    index: TextIndex, plans: Tuple[PatternPlan, ...], *, k: Optional[int] = None
+) -> jnp.ndarray:
+    return count_many(index, plans, k=k)
 
 
 @jax.jit

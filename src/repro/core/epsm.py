@@ -282,12 +282,22 @@ def select_algo_tuned(m: int) -> str:
     return "epsmc"
 
 
-def find(text, pattern, *, algo: str = "auto") -> jnp.ndarray:
-    """Match-start mask for all occurrences of pattern in text."""
+def find(text, pattern, *, algo: str = "auto", k: int = 0) -> jnp.ndarray:
+    """Match-start mask for all occurrences of pattern in text.
+
+    ``k`` is a Hamming mismatch budget (repro.approx, DESIGN.md §8): k > 0
+    reports every position whose m-byte window differs from the pattern in
+    at most k bytes (``algo`` is ignored — the engine's packed counting
+    filter replaces the regime dispatch).  k=0 is the exact paper path.
+    """
     t, p = _to_arrays(text, pattern)
     m = p.shape[0]
     if m == 0:
         raise ValueError("empty pattern")
+    if k:
+        from repro.approx import find_kmismatch
+
+        return find_kmismatch(t, p, k)
     if algo == "auto":
         name = select_algo(m)
     elif algo == "tuned":
@@ -301,15 +311,15 @@ def find(text, pattern, *, algo: str = "auto") -> jnp.ndarray:
     return _ALGOS[name](t, p)
 
 
-def count(text, pattern, *, algo: str = "auto") -> jnp.ndarray:
-    return find(text, pattern, algo=algo).sum(dtype=jnp.int32)
+def count(text, pattern, *, algo: str = "auto", k: int = 0) -> jnp.ndarray:
+    return find(text, pattern, algo=algo, k=k).sum(dtype=jnp.int32)
 
 
-def positions(text, pattern, *, algo: str = "auto"):
+def positions(text, pattern, *, algo: str = "auto", k: int = 0):
     """Occurrence start positions (host-side; forces a sync)."""
     import numpy as np
 
-    mask = jax.device_get(find(text, pattern, algo=algo))
+    mask = jax.device_get(find(text, pattern, algo=algo, k=k))
     return np.nonzero(mask)[0]
 
 

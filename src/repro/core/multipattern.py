@@ -96,12 +96,18 @@ class PatternSet:
     queries afterwards are single engine dispatches over all groups at once
     (the seed implementation issued one dispatch per length group).  This is
     the object the data pipeline holds on to.
+
+    ``k`` is a Hamming mismatch budget (repro.approx, DESIGN.md §8): a
+    k-compiled set treats a document as blocked when any pattern occurs
+    within <= k byte substitutions — typo-tolerant blocklists for free,
+    since every query below flows through the engine's per-plan default.
     """
 
-    def __init__(self, patterns: Sequence):
+    def __init__(self, patterns: Sequence, *, k: int = 0):
         if not patterns:
             raise ValueError("empty PatternSet")
-        self.plans = engine.compile_patterns(patterns)
+        self.k = int(k)
+        self.plans = engine.compile_patterns(patterns, k=self.k)
         self.order = engine.plan_order(self.plans)
         # group-major (seed-compatible) order of the original patterns
         self.groups = {p.m: p.patterns for p in self.plans}

@@ -57,6 +57,26 @@ def pack_u32(text_u8: jnp.ndarray) -> jnp.ndarray:
     return w
 
 
+def count_zero_bytes_u32(x: jnp.ndarray) -> jnp.ndarray:
+    """Number of zero bytes (0..4) in each uint32 lane.
+
+    This is the packed agreement counter of the k-mismatch path
+    (repro.approx): XOR a packed text word against a packed pattern word and
+    the agreeing byte lanes are exactly the zero bytes of the result — a
+    vectorized popcount-style sum, four byte compares folded into one 32-bit
+    lane op per position (cf. Giaquinta, Grabowski & Fredriksson,
+    arXiv:1211.5433, where k-mismatch search in packed text reduces to
+    per-position symbol-agreement counting over words).
+    """
+    x = x.astype(jnp.uint32)
+    acc = jnp.zeros(x.shape, jnp.int32)
+    for s in (0, 8, 16, 24):
+        acc = acc + (((x >> jnp.uint32(s)) & jnp.uint32(0xFF)) == 0).astype(
+            jnp.int32
+        )
+    return acc
+
+
 def pack_word_u32(four_bytes: jnp.ndarray) -> jnp.ndarray:
     """Pack exactly 4 uint8 values into a scalar uint32 (little endian)."""
     b = four_bytes.astype(jnp.uint32)

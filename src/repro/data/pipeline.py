@@ -102,11 +102,19 @@ class LMDataPipeline:
         blocklist: Optional[Sequence[bytes]] = None,
         dedup: bool = False,
         seed: int = 0,
+        blocklist_k: int = 0,
     ):
+        """``blocklist_k`` is a Hamming mismatch budget (repro.approx): with
+        k > 0 a document is dropped when any blocklist pattern occurs within
+        <= k byte substitutions — obfuscated/typo'd terms are still caught.
+        The batched verdict path is unchanged: the k-compiled PatternSet
+        flows through the same single engine dispatch per batch."""
         self.documents = iter(documents)
         self.seq_len = seq_len
         self.batch_size = batch_size
-        self.pattern_set = PatternSet(blocklist) if blocklist else None
+        self.pattern_set = (
+            PatternSet(blocklist, k=blocklist_k) if blocklist else None
+        )
         self.deduper = FingerprintDeduper() if dedup else None
         self.stats = PipelineStats()
         self._buffer = np.zeros(0, dtype=np.int32)

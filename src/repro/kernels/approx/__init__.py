@@ -1,0 +1,2 @@
+from repro.kernels.approx.ops import approx_batched, approx_multipattern  # noqa: F401
+from repro.kernels.approx.ref import approx_batched_ref, kmismatch_ref  # noqa: F401

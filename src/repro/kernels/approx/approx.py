@@ -1,0 +1,154 @@
+"""k-mismatch multi-pattern Pallas kernel: P same-length patterns matched
+under a Hamming budget k in ONE pass, batched over B texts.
+
+Mirrors the multipattern kernel's shape (grid (B, ntiles), halo'd text tile
+staged and packed once, whole-tile pl.when branches) with the approximate
+matcher's two twists (DESIGN.md §8):
+
+  * int8 mismatch-count accumulator: per-position mismatches accumulate as
+    4-agreements-per-lane-op sums (XOR packed words, count nonzero bytes),
+    clamped to k+1 each step — the running value never exceeds the budget
+    sentinel, so int8 is safe for any m (and even unclamped sums fit int8
+    for m <= 127);
+
+  * early exit on budget exhaustion: the relaxed fingerprint LUT gates the
+    whole tile first (a candidate-free tile skips all P verifications), and
+    per pattern the anchor word's mismatch count is tested before the rest
+    of the window is accumulated — when every lane already exceeds k the
+    remaining word/byte passes are skipped via pl.when, the kernel analogue
+    of the engine's compact-then-verify.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.engine import _FP_MULT, _WORD_SALTS, _word_offsets
+
+DEFAULT_TILE = 4096
+PACK = 4
+
+
+def _pat_word(pat32, j):
+    return (
+        pat32[j]
+        | (pat32[j + 1] << 8)
+        | (pat32[j + 2] << 16)
+        | (pat32[j + 3] << 24)
+    )
+
+
+def _nonzero_bytes(x):
+    """Mismatching byte lanes (0..4) of each uint32 XOR word, as int8."""
+    acc = jnp.zeros(x.shape, jnp.int8)
+    for s in (0, 8, 16, 24):
+        acc = acc + (((x >> jnp.uint32(s)) & jnp.uint32(0xFF)) != 0).astype(
+            jnp.int8
+        )
+    return acc
+
+
+def _approx_kernel(
+    cur_ref, nxt_ref, pats_ref, lut_ref, out_ref, *, n_pat: int, m: int,
+    k: int, tile: int, kbits: int, use_lut: bool,
+):
+    full = jnp.concatenate([cur_ref[0], nxt_ref[0]])  # (2*tile,) uint8
+    b32 = full.astype(jnp.uint32)
+    nw = m // PACK  # strided words only: the overlap word would double-count
+    words = {}
+    for i in range(nw):
+        o = PACK * i
+        w = b32[o : o + tile]
+        w = w | (b32[o + 1 : o + 1 + tile] << 8)
+        w = w | (b32[o + 2 : o + 2 + tile] << 16)
+        w = w | (b32[o + 3 : o + 3 + tile] << 24)
+        words[o] = w
+
+    if use_lut:
+        # relaxed-LUT gate: the window fingerprint needs ALL anchor words
+        # (incl. the overlapping final one) to match the engine's hash
+        offsets = _word_offsets(m)
+        v = jnp.zeros((tile,), jnp.uint32)
+        for i, o in enumerate(offsets):
+            if o in words:
+                w = words[o]
+            else:
+                w = b32[o : o + tile]
+                w = w | (b32[o + 1 : o + 1 + tile] << 8)
+                w = w | (b32[o + 2 : o + 2 + tile] << 16)
+                w = w | (b32[o + 3 : o + 3 + tile] << 24)
+            v = v + w * jnp.uint32(int(_WORD_SALTS[i]))
+        h = ((v * jnp.uint32(int(_FP_MULT))) >> jnp.uint32(32 - kbits)).astype(
+            jnp.int32
+        )
+        cand = lut_ref[h]  # (tile,) bool
+    else:
+        cand = jnp.ones((tile,), jnp.bool_)
+
+    out_ref[0, :, :] = jnp.zeros((n_pat, tile), jnp.uint8)
+    cap = jnp.int8(k + 1)  # budget-exhausted sentinel; accumulator clamp
+
+    @pl.when(cand.any())
+    def _verify():
+        for pi in range(n_pat):  # static unroll over the pattern set
+            pat32 = pats_ref[pi, :].astype(jnp.uint32)
+            if nw:
+                mm0 = _nonzero_bytes(words[0] ^ _pat_word(pat32, 0))
+            else:  # m < 4: no packed word; first byte seeds the accumulator
+                mm0 = (full[0:tile] != pats_ref[pi, 0]).astype(jnp.int8)
+
+            # early exit: every lane already over budget after the anchor
+            # word -> the remaining accumulation for this pattern is skipped
+            @pl.when((mm0 <= jnp.int8(k)).any())
+            def _rest(pi=pi, pat32=pat32, mm0=mm0):
+                mm = jnp.minimum(mm0, cap)
+                for i in range(1, nw):
+                    miss = _nonzero_bytes(words[PACK * i] ^ _pat_word(pat32, PACK * i))
+                    mm = jnp.minimum(mm + miss, cap)
+                tail0 = nw * PACK if nw else 1
+                for j in range(tail0, m):
+                    miss = (full[j : j + tile] != pats_ref[pi, j]).astype(jnp.int8)
+                    mm = jnp.minimum(mm + miss, cap)
+                ok = cand & (mm <= jnp.int8(k))
+                out_ref[0, pi, :] = ok.astype(jnp.uint8)
+
+
+def approx_pallas(
+    text_padded: jnp.ndarray,  # (B, (ntiles + 1) * tile) uint8
+    patterns: jnp.ndarray,     # (P, m) uint8
+    lut: jnp.ndarray,          # (2^kbits,) bool relaxed fingerprint table
+    *,
+    k: int,
+    kbits: int,
+    tile: int = DEFAULT_TILE,
+    interpret: bool = True,
+    use_lut: bool = True,
+) -> jnp.ndarray:
+    """Batched grid (B, ntiles) -> uint8 (B, P, ntiles * tile) k-mismatch
+    masks.  ``use_lut=False`` skips the fingerprint gate and counts at every
+    position — required when the compiled plan carries no relaxed LUT (m < 4,
+    k > 2, or a saturated expansion)."""
+    n_pat, m = patterns.shape
+    B = text_padded.shape[0]
+    ntiles = text_padded.shape[1] // tile - 1
+    kernel = functools.partial(
+        _approx_kernel, n_pat=n_pat, m=m, k=k, tile=tile, kbits=kbits,
+        use_lut=use_lut,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(B, ntiles),
+        in_specs=[
+            pl.BlockSpec((1, tile), lambda b, i: (b, i)),
+            pl.BlockSpec((1, tile), lambda b, i: (b, i + 1)),
+            pl.BlockSpec((n_pat, m), lambda b, i: (0, 0)),
+            pl.BlockSpec((lut.shape[0],), lambda b, i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, n_pat, tile), lambda b, i: (b, 0, i)),
+        out_shape=jax.ShapeDtypeStruct((B, n_pat, ntiles * tile), jnp.uint8),
+        interpret=interpret,
+    )(text_padded, text_padded, patterns, lut)

@@ -1,0 +1,93 @@
+"""jit'd public wrappers around the batched k-mismatch Pallas kernel."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.engine import compile_patterns_cached
+from repro.core.packing import as_u8
+from repro.kernels.approx.approx import DEFAULT_TILE, approx_pallas
+
+# int8 accumulator headroom: the kernel clamps at k+1 every step, but the
+# documented safety argument (DESIGN.md §8) also covers unclamped sums only
+# for m <= 127 — enforce it so the contract stays honest.
+MAX_M = 127
+
+
+@functools.partial(
+    jax.jit, static_argnames=("k", "tile", "interpret", "kbits", "use_lut")
+)
+def _run(texts, lengths, patterns, lut, *, k, tile, interpret, kbits, use_lut):
+    B, n = texts.shape
+    m = patterns.shape[1]
+    ntiles = max(1, -(-n // tile))
+    padded = (
+        jnp.zeros((B, (ntiles + 1) * tile), jnp.uint8).at[:, :n].set(texts)
+    )
+    masks = approx_pallas(
+        padded, patterns, lut, k=k, kbits=kbits, tile=tile,
+        interpret=interpret, use_lut=use_lut,
+    )
+    valid = jnp.arange(n)[None, :] <= (lengths[:, None] - m)  # (B, n)
+    return masks[:, :, :n].astype(jnp.bool_) & valid[:, None, :]
+
+
+def approx_batched(
+    texts, patterns, k: int, lengths=None, *, tile: int = DEFAULT_TILE,
+    interpret: bool = True,
+):
+    """(B, n) texts x (P, m) same-length patterns -> bool (B, P, n) masks of
+    positions matching under <= k mismatches; 1 <= m <= 127.
+
+    `lengths` gives per-row true lengths (matches never start in padding).
+    The relaxed fingerprint LUT is compiled from the pattern stack via the
+    engine's plan compiler, so kernel and core share one gate; plans without
+    a usable gate (m < 4, k > 2, saturated expansion) verify every tile.
+    """
+    t = as_u8(texts)
+    if t.ndim == 1:
+        t = t[None, :]
+    ps = as_u8(patterns)
+    if ps.ndim != 2:
+        raise ValueError("patterns must be (P, m)")
+    if not 1 <= ps.shape[1] <= MAX_M:
+        raise ValueError(f"approx kernel requires 1 <= m <= {MAX_M}")
+    if ps.shape[1] > tile:
+        raise ValueError("pattern longer than tile")
+    if k < 0:
+        raise ValueError("mismatch budget k must be >= 0")
+    B, n = t.shape
+    if lengths is None:
+        lengths = jnp.full((B,), n, jnp.int32)
+    lengths = jnp.asarray(lengths, jnp.int32)
+    if n == 0:
+        return jnp.zeros((B, ps.shape[0], 0), jnp.bool_)
+    plans = compile_patterns_cached(list(jax.device_get(ps)), k=int(k))
+    assert len(plans) == 1 and plans[0].ids == tuple(range(ps.shape[0]))
+    plan = plans[0]
+    use_lut = plan.relaxed_lut is not None and int(k) <= plan.k
+    lut = plan.relaxed_lut if use_lut else plan.lut_any  # dummy carrier if off
+    return _run(
+        t, lengths, plan.patterns, lut, k=int(k),
+        tile=tile, interpret=interpret, kbits=plan.kbits, use_lut=use_lut,
+    )
+
+
+def approx_multipattern(
+    text, patterns, k: int, *, tile: int = DEFAULT_TILE, interpret: bool = True
+):
+    """(P, m) pattern stack -> bool (P, n) k-mismatch match-start masks.
+
+    Single-text convenience wrapper over the batched kernel."""
+    t = as_u8(text)
+    if t.ndim != 1:
+        raise ValueError("text must be 1-D; use approx_batched")
+    ps = as_u8(patterns)
+    if ps.ndim != 2:
+        raise ValueError("patterns must be (P, m)")
+    if t.shape[0] == 0:
+        return jnp.zeros((ps.shape[0], 0), jnp.bool_)
+    return approx_batched(t[None, :], ps, k, tile=tile, interpret=interpret)[0]

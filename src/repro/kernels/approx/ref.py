@@ -1,0 +1,40 @@
+"""Pure-jnp k-mismatch oracles: shifted byte compares, no packed machinery —
+an implementation-independent reference for the kernel and the engine."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.packing import as_u8, shift_left
+
+
+def kmismatch_ref(text, pattern, k: int) -> jnp.ndarray:
+    """bool[n]: Hamming distance of the window at i to pattern <= k."""
+    t, p = as_u8(text), as_u8(pattern)
+    n, m = t.shape[0], p.shape[0]
+    if n < m:
+        return jnp.zeros((n,), jnp.bool_)
+    mm = jnp.zeros((n,), jnp.int32)
+    for j in range(m):
+        mm = mm + (shift_left(t, j) != p[j]).astype(jnp.int32)
+    valid = jnp.arange(n) <= (n - m)
+    return (mm <= k) & valid
+
+
+def approx_batched_ref(texts, patterns, k: int, lengths=None) -> jnp.ndarray:
+    """bool (B, P, n) oracle with per-row valid-start masking."""
+    ts, ps = as_u8(texts), as_u8(patterns)
+    if ts.ndim == 1:
+        ts = ts[None, :]
+    B, n = ts.shape
+    P, m = ps.shape
+    mm = jnp.zeros((B, P, n), jnp.int32)
+    for j in range(m):
+        mm = mm + (
+            shift_left(ts, j)[:, None, :] != ps[None, :, j, None]
+        ).astype(jnp.int32)
+    if lengths is None:
+        lengths = jnp.full((B,), n, jnp.int32)
+    lengths = jnp.asarray(lengths, jnp.int32)
+    valid = jnp.arange(n)[None, :] <= (lengths[:, None] - m)
+    return (mm <= k) & valid[:, None, :]

@@ -1,0 +1,215 @@
+"""repro.approx — packed k-mismatch subsystem: engine integration, relaxed
+fingerprint gate soundness, Pallas kernel agreement, and the fuzzy serving /
+data-pipeline consumers (DESIGN.md §8)."""
+
+import numpy as np
+import pytest
+
+from repro.approx import count_kmismatch, find_kmismatch, kmismatch_naive
+from repro.core import engine, epsm
+
+from conftest import make_text
+
+
+def _mixed_patterns(rng, text, lengths):
+    pats = []
+    for m in lengths:
+        s = rng.randint(0, len(text) - m + 1)
+        pats.append(text[s : s + m].copy())
+        pats.append(rng.randint(0, 5, size=m).astype(np.uint8))
+    return pats
+
+
+def test_k0_bit_identical_to_exact(rng):
+    """match_many/count_many with k=0 must equal the exact path bit-for-bit,
+    even on plans compiled with a nonzero mismatch budget."""
+    docs = [make_text(rng, n, 4) for n in (513, 100, 7, 256)]
+    pats = _mixed_patterns(rng, docs[0], (2, 3, 5, 8, 12, 16, 24))
+    idx = engine.build_index(docs)
+    exact = engine.compile_patterns(pats)
+    fuzzy = engine.compile_patterns(pats, k=2)
+    np.testing.assert_array_equal(
+        np.asarray(engine.match_many_jit(idx, exact)),
+        np.asarray(engine.match_many_jit(idx, fuzzy, k=0)),
+    )
+    np.testing.assert_array_equal(
+        np.asarray(engine.count_many_jit(idx, exact)),
+        np.asarray(engine.count_many_jit(idx, fuzzy, k=0)),
+    )
+
+
+def test_count_many_matches_naive_grid(rng):
+    """Deterministic grid over regimes x alphabets x budgets, batched ragged
+    texts, vs the naive k-mismatch reference."""
+    for sigma in (2, 4, 256):
+        docs = [make_text(rng, n, sigma) for n in (400, 37, 3)]
+        for m in (2, 4, 5, 8, 12, 16):
+            pats = [
+                docs[0][: m].copy(),
+                rng.randint(0, sigma, size=m).astype(np.uint8),
+            ]
+            for k in (1, 2, 3):
+                plans = engine.compile_patterns(pats, k=k)
+                order = engine.plan_order(plans)
+                idx = engine.build_index(docs)
+                mask = np.asarray(engine.match_many_jit(idx, plans, k=k))
+                counts = np.asarray(engine.count_many_jit(idx, plans, k=k))
+                for bi, doc in enumerate(docs):
+                    assert not mask[bi, :, len(doc):].any(), "match in padding"
+                    for row, pid in enumerate(order):
+                        want = kmismatch_naive(doc, pats[pid], k)
+                        np.testing.assert_array_equal(
+                            mask[bi, row, : len(doc)], want,
+                            err_msg=f"sigma={sigma} m={m} k={k} doc={bi}",
+                        )
+                        assert counts[bi, row] == want.sum()
+
+
+def test_planted_fuzzy_occurrence_found(rng):
+    """A corrupted copy of the pattern is invisible to the exact path and
+    found by the k >= #typos budgets."""
+    t = make_text(rng, 5000, 64)
+    p = t[1000:1012].copy()
+    site = 3000
+    t[site : site + 12] = p
+    t[site + 4] ^= 3
+    t[site + 9] ^= 7  # two typos
+    exact = set(np.nonzero(np.asarray(epsm.find(t, p)))[0].tolist())
+    k1 = set(np.nonzero(np.asarray(find_kmismatch(t, p, 1)))[0].tolist())
+    k2 = set(np.nonzero(np.asarray(find_kmismatch(t, p, 2)))[0].tolist())
+    assert site not in exact and site not in k1 and site in k2
+    assert exact <= k1 <= k2  # budgets are monotone
+
+
+def test_relaxed_gate_sound_on_adversarial_density():
+    """All-same-byte text: every position is a <= k candidate, the sparse
+    budget overflows, and the dense fallback must keep counts exact."""
+    t = np.zeros(8192, np.uint8)
+    pats = [np.zeros(8, np.uint8), np.zeros(16, np.uint8)]
+    for k in (1, 2):
+        plans = engine.compile_patterns(pats, k=k)
+        idx = engine.build_index(t)
+        counts = np.asarray(engine.count_many_jit(idx, plans, k=k))
+        order = engine.plan_order(plans)
+        for row, pid in enumerate(order):
+            assert counts[0, row] == kmismatch_naive(t, pats[pid], k).sum()
+
+
+def test_relaxed_lut_covers_reachable_fingerprints(rng):
+    """Gate soundness at the LUT level: the fingerprint of ANY window within
+    Hamming distance k of the pattern must be registered."""
+    from repro.approx.relaxed import relaxed_window_lut
+    from repro.core.engine import (
+        ENGINE_KBITS, _np_pack_words, _np_window_fingerprint, _word_offsets,
+    )
+
+    for m in (4, 7, 8, 13):
+        p = rng.randint(0, 256, size=m).astype(np.uint8)
+        lut = relaxed_window_lut(p[None, :], kbits=ENGINE_KBITS, k=1)
+        assert lut is not None
+        for _ in range(200):
+            w = p.copy()
+            j = rng.randint(0, m)
+            w[j] = rng.randint(0, 256)  # <= 1 substitution
+            fp = _np_window_fingerprint(
+                _np_pack_words(w[None, :], _word_offsets(m)), ENGINE_KBITS
+            )[0]
+            assert lut[fp], f"m={m}: reachable fingerprint not registered"
+
+
+def test_sparse_gated_count_path(rng):
+    """Force the relaxed-LUT sparse path (P >= 4, B*n*P >= 8M, low union
+    density) and cross-check against the naive reference on ragged rows."""
+    from repro.approx.counting import BLOCK_FRAC_MAX, _block_frac
+
+    # m=4 keeps the k=1 union LUT sparse enough for the block gate at P=4
+    docs = [make_text(rng, n, 256) for n in (1_000_000, 50_000)]
+    pats = [docs[0][s : s + 4].copy() for s in (1000, 50_000, 120_000, 333_333)]
+    plans = engine.compile_patterns(pats, k=1)
+    assert plans[0].relaxed_lut is not None
+    assert _block_frac(plans[0]) <= BLOCK_FRAC_MAX, "gate should engage"
+    assert len(docs) * 1_000_000 * len(pats) >= 8_000_000  # padded B*n*P
+    idx = engine.build_index(docs)
+    counts = np.asarray(engine.count_many_jit(idx, plans, k=1))
+    order = engine.plan_order(plans)
+    for bi, doc in enumerate(docs):
+        for row, pid in enumerate(order):
+            assert counts[bi, row] == kmismatch_naive(doc, pats[pid], 1).sum()
+
+
+def test_kernel_matches_ref(rng):
+    """Pallas kernel (interpret mode) vs the pure-jnp oracle across regimes,
+    budgets, multi-tile grids, and ragged batched rows."""
+    from repro.kernels.approx import approx_batched, approx_batched_ref
+
+    for sigma in (4, 256):
+        texts = np.stack([make_text(rng, 300, sigma) for _ in range(2)])
+        lengths = np.asarray([300, 117], np.int32)
+        for m in (2, 5, 8, 16):
+            ps = np.stack([
+                texts[0][40 : 40 + m],
+                rng.randint(0, sigma, size=m).astype(np.uint8),
+            ])
+            for k in (0, 1, 2):
+                got = np.asarray(
+                    approx_batched(texts, ps, k, lengths, tile=128)
+                )
+                want = np.asarray(approx_batched_ref(texts, ps, k, lengths))
+                np.testing.assert_array_equal(
+                    got, want, err_msg=f"sigma={sigma} m={m} k={k}"
+                )
+
+
+def test_epsm_find_k_kwarg(rng):
+    """epsm.find/count/positions expose the budget as a kwarg."""
+    t = make_text(rng, 800, 4)
+    p = rng.randint(0, 4, size=6).astype(np.uint8)
+    want = kmismatch_naive(t, p, 1)
+    np.testing.assert_array_equal(np.asarray(epsm.find(t, p, k=1)), want)
+    assert int(epsm.count(t, p, k=1)) == want.sum()
+    np.testing.assert_array_equal(
+        epsm.positions(t, p, k=1), np.nonzero(want)[0]
+    )
+    assert int(count_kmismatch(t, p, 1)) == want.sum()
+
+
+def test_fuzzy_stop_scanner():
+    """Serving tolerance mode: a typo'd stop sequence still stops the
+    stream at the right step when k=1; the exact scanner never fires."""
+    from repro.serve.engine import StopScanner
+
+    stream = b"aa STOPW0RD bbbbbbbb"  # O -> 0 typo in the generated bytes
+    for k, expect in ((0, []), (1, [10])):
+        sc = StopScanner([b"STOPWORD"], 1, len(stream), k=k)
+        fired = []
+        for step in range(len(stream)):
+            hits = sc.scan(np.asarray([stream[step]], np.int32), step)
+            if hits[0, 0]:
+                fired.append(step)
+        assert fired == expect, (k, fired)
+        assert sc.dispatch_count == len(stream)
+
+
+def test_pipeline_fuzzy_blocklist(rng):
+    """Data-plane consumer: blocklist_k=1 drops documents containing a
+    one-typo corruption of a blocked term; k=0 keeps them."""
+    from repro.data.pipeline import LMDataPipeline
+
+    bad = b"forbiddenterm"
+    docs = [
+        rng.randint(97, 123, size=2000).astype(np.uint8) for _ in range(6)
+    ]
+    corrupted = np.frombuffer(bad, np.uint8).copy()
+    corrupted[5] ^= 2
+    for i in (1, 4):
+        docs[i][300 : 300 + len(bad)] = corrupted
+    blocked = {}
+    for k in (0, 1):
+        pipe = LMDataPipeline(
+            iter([d.copy() for d in docs]), seq_len=64, batch_size=2,
+            blocklist=[bad], blocklist_k=k,
+        )
+        for _ in pipe:
+            pass
+        blocked[k] = pipe.stats.docs_blocked
+    assert blocked == {0: 0, 1: 2}, blocked

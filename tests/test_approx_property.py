@@ -1,0 +1,82 @@
+"""Hypothesis property tests for the k-mismatch subsystem: count_many under
+any budget vs a naive Python reference, over random alphabets {2, 4, 256}
+and pattern lengths 2..16 (self-skipping without hypothesis, same pattern as
+tests/test_property.py)."""
+
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.approx import kmismatch_naive  # noqa: E402
+from repro.core import engine  # noqa: E402
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+sigma_st = st.sampled_from([2, 4, 256])
+
+
+@given(
+    sigma=sigma_st,
+    n=st.integers(0, 400),
+    m=st.integers(2, 16),
+    k=st.integers(0, 2),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(**SETTINGS)
+def test_count_many_equals_naive(sigma, n, m, k, seed):
+    rng = np.random.RandomState(seed)
+    t = rng.randint(0, sigma, size=n).astype(np.uint8)
+    p = rng.randint(0, sigma, size=m).astype(np.uint8)
+    plans = engine.compile_patterns([p], k=k)
+    idx = engine.build_index(t)
+    got = int(np.asarray(engine.count_many_jit(idx, plans, k=k))[0, 0])
+    assert got == kmismatch_naive(t, p, k).sum()
+
+
+@given(
+    sigma=sigma_st,
+    m=st.integers(2, 16),
+    k=st.integers(0, 2),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(**SETTINGS)
+def test_extracted_window_with_k_typos_found(sigma, m, k, seed):
+    """Completeness: corrupt an extracted window at exactly k positions —
+    the budget-k scan must still report that start position."""
+    rng = np.random.RandomState(seed)
+    t = rng.randint(0, sigma, size=200).astype(np.uint8)
+    s = rng.randint(0, len(t) - m + 1)
+    p = t[s : s + m].copy()
+    for j in rng.choice(m, size=k, replace=False):
+        t[s + j] = rng.randint(0, 256)
+    plans = engine.compile_patterns([p], k=k)
+    mask = np.asarray(
+        engine.match_many_jit(engine.build_index(t), plans, k=k)
+    )[0, 0]
+    assert mask[s]
+    # soundness: every reported position really is within distance k
+    for i in np.nonzero(mask)[0]:
+        assert np.count_nonzero(t[i : i + m] != p) <= k
+
+
+@given(
+    sigma=sigma_st,
+    m=st.integers(2, 16),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(**SETTINGS)
+def test_budget_monotone(sigma, m, seed):
+    """occ_k(t, p) is nondecreasing in k, and occ_0 equals the exact path."""
+    rng = np.random.RandomState(seed)
+    t = rng.randint(0, sigma, size=300).astype(np.uint8)
+    p = rng.randint(0, sigma, size=m).astype(np.uint8)
+    idx = engine.build_index(t)
+    prev = None
+    for k in (0, 1, 2, 3):
+        plans = engine.compile_patterns([p], k=min(k, 2))
+        c = int(np.asarray(engine.count_many_jit(idx, plans, k=k))[0, 0])
+        if prev is not None:
+            assert c >= prev
+        prev = c

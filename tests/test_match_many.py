@@ -165,3 +165,65 @@ def test_stop_scanner_one_dispatch_per_step():
     assert first_hit[(2, 0)] == 3
     # the zero-byte stop must NOT fire from the uninitialized ring apron
     assert (2, 3) not in first_hit and (0, 3) not in first_hit
+
+
+def _scan_stream(stops, stream, k=0):
+    """Drive a 1-stream StopScanner; returns {stop_index: [hit steps]}."""
+    from repro.serve.engine import StopScanner
+
+    sc = StopScanner(stops, 1, len(stream), k=k)
+    hits = {}
+    for step in range(len(stream)):
+        row = sc.scan(np.asarray([stream[step]], np.int32), step)[0]
+        for si in np.nonzero(row)[0]:
+            hits.setdefault(int(si), []).append(step)
+    return hits, sc
+
+
+def test_stop_scanner_ring_wraparound():
+    """The tail ring is O(window) and slides at step % W == 0: stop
+    occurrences spanning a wrap-around point (bytes written before AND after
+    a slide) must still be reported, at every wrap over a long stream."""
+    stop = b"abcd"  # W = 4: wraps at steps 4, 8, 12, ...
+    # occurrences at starts 2 (spans the step-4 slide), 6 (spans step-8),
+    # 11 (spans the step-12 slide at its last byte), and 16 (aligned)
+    stream = b"xyabcdabcd_abcd_abcd"
+    hits, sc = _scan_stream([stop], stream)
+    assert sc.buf.shape == (1, 2 * len(stop) - 1)  # O(W), not O(max_new)
+    want = [
+        e for e in range(len(stream))
+        if stream[e - 3 : e + 1] == stop and e >= 3
+    ]
+    assert hits.get(0, []) == want == [5, 9, 14, 19]
+    assert sc.dispatch_count == len(stream)
+
+
+def test_stop_scanner_two_stops_same_step():
+    """Two stop sequences ending on the same decode step must BOTH be
+    reported in that step's hit matrix (ties are not swallowed)."""
+    stops = [b"abc", b"xbc", b"bc", b"zzzz"]
+    stream = b"__abc__xbc"
+    hits, _ = _scan_stream(stops, stream)
+    # step 4 completes "abc" and "bc"; step 9 completes "xbc" and "bc"
+    assert hits.get(0, []) == [4]
+    assert hits.get(1, []) == [9]
+    assert hits.get(2, []) == [4, 9]
+    assert 3 not in hits
+
+
+def test_stop_scanner_wraparound_exhaustive(rng):
+    """Randomized cross-check: every (stop, stream) hit over a stream many
+    times longer than the window agrees with the naive scan, so no boundary
+    (apron edge, slide point, buffer end) drops or invents a match."""
+    sigma = 3
+    stops = [bytes(rng.randint(0, sigma, size=m).astype(np.uint8))
+             for m in (2, 3, 5)]
+    stream = bytes(rng.randint(0, sigma, size=64).astype(np.uint8))
+    hits, _ = _scan_stream(stops, stream)
+    for si, stop in enumerate(stops):
+        want = [
+            e for e in range(len(stream))
+            if e >= len(stop) - 1
+            and stream[e - len(stop) + 1 : e + 1] == stop
+        ]
+        assert hits.get(si, []) == want, f"stop {si}"
