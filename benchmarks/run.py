@@ -19,6 +19,20 @@ def _emit(name: str, us: float, derived: str = ""):
     print(f"{name},{us:.1f},{derived}")
 
 
+def timeit_median(fn, *args, reps: int = 7) -> float:
+    """Median wall-time of fn(*args) after one warmup call, blocking on the
+    result each rep (the ONE timing helper every bench below uses)."""
+    import jax
+
+    jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
 def bench_paper_tables(size: int, full: bool, outdir: Path):
     from benchmarks import paper_tables as pt
 
@@ -97,15 +111,6 @@ def bench_multipattern(size: int, outdir: Path):
     from repro.core.multipattern import count_multi_vmap
     from repro.data import corpus
 
-    def timeit(fn, *a, reps=7):
-        jax.block_until_ready(fn(*a))
-        ts = []
-        for _ in range(reps):
-            t0 = time.perf_counter()
-            jax.block_until_ready(fn(*a))
-            ts.append(time.perf_counter() - t0)
-        return float(np.median(ts))
-
     text = corpus.make_corpus("english", size, seed=0)
     tj = jnp.asarray(text)
     rows = []
@@ -118,8 +123,8 @@ def bench_multipattern(size: int, outdir: Path):
         assert np.array_equal(
             np.asarray(f_eng(tj))[0], np.asarray(f_vmap(tj, pj))
         ), "engine/vmap count divergence"
-        dt_v = timeit(f_vmap, tj, pj)
-        dt_e = timeit(f_eng, tj)
+        dt_v = timeit_median(f_vmap, tj, pj)
+        dt_e = timeit_median(f_eng, tj)
         for name, dt, speedup in (
             (f"multipattern/vmap_baseline/p{npat}", dt_v, 1.0),
             (f"multipattern/engine/p{npat}", dt_e, dt_v / dt_e),
@@ -158,15 +163,6 @@ def bench_approx(size: int, outdir: Path):
     from repro.core import engine as eng
     from repro.data import corpus
 
-    def timeit(fn, *a, reps=7):
-        jax.block_until_ready(fn(*a))
-        ts = []
-        for _ in range(reps):
-            t0 = time.perf_counter()
-            jax.block_until_ready(fn(*a))
-            ts.append(time.perf_counter() - t0)
-        return float(np.median(ts))
-
     text = corpus.make_corpus("english", size, seed=0)
     tj = jnp.asarray(text)
     rows = []
@@ -183,7 +179,7 @@ def bench_approx(size: int, outdir: Path):
             want = int(kmismatch_naive(text, pats[0], k).sum())
             got = int(np.asarray(f(tj))[0, 0])
             assert got == want, f"approx/naive divergence m={m} k={k}"
-            dt = timeit(f, tj)
+            dt = timeit_median(f, tj)
             if k == 0:
                 dt_exact = dt
             ratio = dt / dt_exact
@@ -203,6 +199,116 @@ def bench_approx(size: int, outdir: Path):
             _emit(f"approx/m{m}/k{k}", dt * 1e6,
                   f"GBps={size/dt/1e9:.3f};vs_exact={ratio:.2f}x")
     (outdir / "BENCH_approx.json").write_text(json.dumps(rows, indent=1))
+
+
+def bench_stream(outdir: Path):
+    """Streaming scan engine vs resident whole-text dispatch, plus the
+    shared-fingerprint multi-group count vs the per-group-pass baseline.
+
+    Writes BENCH_stream.json.  Two row families:
+
+      * stream/{resident,scanner}/<MB>mb — per-pattern counts of 8 length-8
+        patterns over a genome corpus at 16/64/256 MB, timed END TO END from
+        a host buffer (device_put + one dispatch for resident; chunked
+        double-buffered scan for the scanner).  Rows carry the estimated
+        peak device bytes: resident materializes the ~9.5 byte/byte index,
+        the scanner O(chunk_bytes).  ``ratio_vs_resident`` is scanner GBps /
+        resident GBps.
+
+      * stream/fp_{pergroup_baseline,shared}/3groups — resident count_many
+        over 3 EPSMb length groups (m = 8/12/15, P = 8 each, 32 MB): one
+        jitted dispatch per group (each paying its own fingerprint pass and
+        candidate compaction — the pre-stream engine shape) vs the single
+        shared-substrate dispatch (_count_groups_b_shared).  Counts are
+        cross-checked before timing.
+    """
+    import json
+
+    import jax
+
+    from repro.core import engine as eng
+    from repro.core.stream import StreamScanner
+    from repro.data import corpus
+
+    rows = []
+    chunk = 1 << 22
+
+    # -- streaming vs resident ---------------------------------------------
+    for mb in (16, 64, 256):
+        size = mb * 1_000_000
+        text = corpus.make_corpus("genome", size, seed=0)
+        pats = [text[i * 1009 : i * 1009 + 8].copy() for i in range(8)]
+        plans = eng.compile_patterns(list(pats))
+
+        f_res = jax.jit(lambda t: eng.count_many(eng.build_index(t), plans))
+
+        def resident(th=text, f=f_res):
+            return f(jax.device_put(th))
+
+        sc = StreamScanner(plans, chunk)
+        sc.count_many(text[: 2 * sc.window_bytes])  # warm the per-shape trace
+
+        def streamed(th=text, s=sc):
+            return s.count_many(th)
+
+        assert np.array_equal(streamed(), np.asarray(resident())[0]), (
+            f"stream/resident divergence at {mb} MB"
+        )
+        dt_r = timeit_median(resident, reps=3)
+        dt_s = timeit_median(streamed, reps=3)
+        res_dev = int(9.5 * size)  # text + packed + block_fp + fp temporary
+        for name, dt, dev in (
+            (f"stream/resident/{mb}mb", dt_r, res_dev),
+            (f"stream/scanner/{mb}mb", dt_s, sc.device_bytes_per_chunk),
+        ):
+            rows.append({
+                "name": name,
+                "us_per_call": dt * 1e6,
+                "GBps": size / dt / 1e9,
+                "P": 8,
+                "m": 8,
+                "size_bytes": size,
+                "chunk_bytes": chunk,
+                "peak_device_bytes": dev,
+                "ratio_vs_resident": round(dt_r / dt, 3),
+            })
+            _emit(name, dt * 1e6,
+                  f"GBps={size/dt/1e9:.3f};vs_resident={dt_r/dt:.2f}x;"
+                  f"dev_bytes={dev}")
+
+    # -- shared fingerprint pass vs per-group passes ------------------------
+    size = 32_000_000
+    text = corpus.make_corpus("genome", size, seed=0)
+    pats = []
+    for m in (8, 12, 15):
+        pats += [text[i * 997 + m : i * 997 + 2 * m].copy() for i in range(8)]
+    plans = eng.compile_patterns(pats)
+    idx = jax.tree_util.tree_map(
+        jax.device_put, eng.build_index(jax.device_put(text))
+    )
+    f_shared = jax.jit(lambda i: eng.count_many(i, plans))
+    f_per = [jax.jit(lambda i, p=p: eng.count_many(i, (p,))) for p in plans]
+    got = np.asarray(f_shared(idx))[0]
+    want = np.concatenate([np.asarray(f(idx))[0] for f in f_per])
+    assert np.array_equal(got, want), "shared/per-group count divergence"
+    dt_shared = timeit_median(f_shared, idx, reps=5)
+    dt_per = sum(timeit_median(f, idx, reps=5) for f in f_per)
+    for name, dt in (
+        ("stream/fp_pergroup_baseline/3groups", dt_per),
+        ("stream/fp_shared/3groups", dt_shared),
+    ):
+        rows.append({
+            "name": name,
+            "us_per_call": dt * 1e6,
+            "GBps": size / dt / 1e9,
+            "P": len(pats),
+            "groups": 3,
+            "size_bytes": size,
+            "speedup_vs_pergroup": round(dt_per / dt, 3),
+        })
+        _emit(name, dt * 1e6,
+              f"GBps={size/dt/1e9:.3f};vs_pergroup={dt_per/dt:.2f}x")
+    (outdir / "BENCH_stream.json").write_text(json.dumps(rows, indent=1))
 
 
 def bench_pipeline(outdir: Path):
@@ -250,6 +356,9 @@ def main():
     # not depend on --size
     bench_multipattern(1_000_000, outdir)
     bench_approx(1_000_000, outdir)
+    # fixed sizes for the same reason: the stream rows (16/64/256 MB + the
+    # 32 MB 3-group fingerprint-sharing rows) are the PR's perf trajectory
+    bench_stream(outdir)
     bench_pipeline(outdir)
     bench_roofline_report(outdir)
 

@@ -31,13 +31,14 @@ from __future__ import annotations
 import jax.numpy as jnp
 from jax import lax
 
+from typing import Optional
+
 from repro.core.engine import (
+    FingerprintBank,
     PatternPlan,
     TextIndex,
     _gather_candidate_rows,
     _valid_starts,
-    _window_fingerprint,
-    _word_offsets,
 )
 from repro.core.packing import PACK, count_zero_bytes_u32, shift_left
 
@@ -85,11 +86,17 @@ def _dense_count_approx(index: TextIndex, plan: PatternPlan, k: int) -> jnp.ndar
     return match_group_approx(index, plan, k).sum(-1, dtype=jnp.int32)
 
 
-def _approx_candidates(index: TextIndex, plan: PatternPlan):
+def _approx_candidates(
+    index: TextIndex, plan: PatternPlan, bank: Optional[FingerprintBank] = None
+):
     """Relaxed-LUT candidate blocks: one O(n) window fingerprint + probe
-    (independent of P and k), compacted to APPROX_CAND_BLOCK granularity."""
+    (independent of P and k), compacted to APPROX_CAND_BLOCK granularity.
+    The fingerprint itself is a shared-prefix read from the FingerprintBank
+    — exact and approx plans of any length split one pass over `packed`."""
     B, n = index.text.shape
-    h = _window_fingerprint(index.packed, _word_offsets(plan.m), plan.kbits)
+    if bank is None:
+        bank = FingerprintBank(index.packed)
+    h = bank.window_fp(plan.m, plan.kbits)
     cand = plan.relaxed_lut[h] & _valid_starts(index, plan.m)
     C = APPROX_CAND_BLOCK
     nblk = -(-n // C)
@@ -140,7 +147,12 @@ def _approx_verify_counts(
     return counts.at[bvec].add(sums, mode="drop")
 
 
-def count_group_approx(index: TextIndex, plan: PatternPlan, k: int) -> jnp.ndarray:
+def count_group_approx(
+    index: TextIndex,
+    plan: PatternPlan,
+    k: int,
+    bank: Optional[FingerprintBank] = None,
+) -> jnp.ndarray:
     """int32 (B, P) k-mismatch occurrence counts: relaxed-LUT sparse path
     when the plan carries a usable gate, dense counting otherwise."""
     B, n = index.text.shape
@@ -161,7 +173,7 @@ def count_group_approx(index: TextIndex, plan: PatternPlan, k: int) -> jnp.ndarr
     )
     if not gated:
         return _dense_count_approx(index, plan, k)
-    blk_any, budget, nblk = _approx_candidates(index, plan)
+    blk_any, budget, nblk = _approx_candidates(index, plan, bank)
     return lax.cond(
         blk_any.sum(dtype=jnp.int32) <= budget,
         lambda _: _approx_verify_counts(index, plan, k, blk_any, budget, nblk),

@@ -16,6 +16,7 @@ from repro.core.epsm import (
     select_algo,
 )
 from repro.core.engine import (
+    FingerprintBank,
     PatternPlan,
     TextIndex,
     any_many,
@@ -25,10 +26,13 @@ from repro.core.engine import (
     match_many,
 )
 from repro.core.multipattern import PatternSet, contains_any, count_multi, find_multi
+from repro.core.stream import StreamScanner, find_stream, stream_count
 from repro.core.baselines import BASELINES, naive_np
 
 __all__ = [
+    "FingerprintBank",
     "PatternPlan",
+    "StreamScanner",
     "TextIndex",
     "any_many",
     "build_index",
@@ -51,7 +55,9 @@ __all__ = [
     "find",
     "find_jit",
     "find_multi",
+    "find_stream",
     "naive_np",
+    "stream_count",
     "positions",
     "select_algo",
 ]

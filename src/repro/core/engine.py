@@ -41,6 +41,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import weakref
 from typing import Any, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -54,6 +55,8 @@ from repro.core.packing import (
     PACK,
     as_u8,
     fingerprint_weights,
+    fp_accum_word,
+    fp_finalize,
     hash_blocks,
     pack_u32,
     shift_left,
@@ -71,11 +74,11 @@ ENGINE_KBITS = 17
 # true candidates) small; 128 measured ~1.6x slower end to end.
 CAND_BLOCK = 32
 
-_FP_MULT = np.uint32(2654435761)  # Knuth's multiplicative-hash constant
-# fixed odd salts mixing the packed words of one window into one fingerprint
-_WORD_SALTS = np.uint32(
-    np.random.RandomState(0xE95).randint(1, 2**30, size=8) * 2 + 1
-)
+# Fingerprint constants live in packing.py next to the mixing primitives;
+# the private aliases keep existing importers (approx.relaxed, the Pallas
+# kernels) working unchanged.
+from repro.core.packing import FP_MULT as _FP_MULT  # noqa: E402
+from repro.core.packing import WORD_SALTS as _WORD_SALTS  # noqa: E402
 
 
 # ---------------------------------------------------------------------------
@@ -185,10 +188,63 @@ def _window_fingerprint(packed: jnp.ndarray, offsets, kbits: int) -> jnp.ndarray
     independent of the number of patterns — this is the engine's whole win."""
     v = jnp.zeros(packed.shape, jnp.uint32)
     for i, o in enumerate(offsets):
-        v = v + shift_left(packed, o) * jnp.uint32(int(_WORD_SALTS[i]))
-    return ((v * jnp.uint32(int(_FP_MULT))) >> jnp.uint32(32 - kbits)).astype(
-        jnp.int32
-    )
+        v = fp_accum_word(v, shift_left(packed, o), i)
+    return fp_finalize(v, kbits)
+
+
+def _n_strided_words(m: int) -> int:
+    """Number of strided (4-aligned, non-overlapping-start) anchor words in
+    _word_offsets(m) — the prefix-chain part shared across pattern lengths."""
+    return len(range(0, m - PACK + 1, PACK))
+
+
+class FingerprintBank:
+    """Shared incremental window-fingerprint substrate (DESIGN.md §9).
+
+    ``_window_fingerprint`` is a salted sum over the packed words at a
+    length's word offsets.  The strided offsets (0, 4, 8, ...) of every
+    pattern length form a prefix chain with FIXED salts (salt i belongs to
+    offset 4i), so the salted terms can be accumulated ONCE in one traversal
+    of ``packed`` and every length group's fingerprint read off as a prefix
+    of the running sum — plus, for m % 4 != 0, the group's single
+    overlapping tail word.  G length groups thus cost max_nw + G_tail term
+    passes over ``packed`` instead of sum_g nw(m_g): one shared fingerprint
+    pass for the whole plan set, on the resident path, the streaming path,
+    and the approx path alike.
+
+    uint32 addition is commutative and associative mod 2^32, so the derived
+    fingerprints are bit-identical to the direct computation.
+    """
+
+    def __init__(self, packed: jnp.ndarray):
+        self.packed = packed
+        # nterms -> accumulated salted sum over strided words [0, nterms)
+        self._prefix = {0: jnp.zeros(packed.shape, jnp.uint32)}
+        self._fps: dict = {}  # (m, kbits) -> finalized fingerprint map
+
+    def _strided_sum(self, nterms: int) -> jnp.ndarray:
+        done = max(t for t in self._prefix if t <= nterms)
+        acc = self._prefix[done]
+        for i in range(done, nterms):
+            acc = fp_accum_word(acc, shift_left(self.packed, PACK * i), i)
+            self._prefix[i + 1] = acc
+        return self._prefix[nterms]
+
+    def window_fp(self, m: int, kbits: int) -> jnp.ndarray:
+        """(B, n) int32 fingerprint of the m-byte window at every position —
+        bit-identical to _window_fingerprint(packed, _word_offsets(m), kbits)."""
+        key = (m, kbits)
+        fp = self._fps.get(key)
+        if fp is None:
+            ns = _n_strided_words(m)
+            v = self._strided_sum(ns)
+            if m % PACK and m >= PACK:
+                # the one overlapping tail word is group-specific: offset
+                # m - 4, salted with the next free salt index (list order)
+                v = fp_accum_word(v, shift_left(self.packed, m - PACK), ns)
+            fp = fp_finalize(v, kbits)
+            self._fps[key] = fp
+        return fp
 
 
 @jax.tree_util.register_pytree_node_class
@@ -344,6 +400,45 @@ def plan_order(plans: Sequence[PatternPlan]) -> np.ndarray:
 
 _PLAN_CACHE: dict = {}
 _PLAN_CACHE_MAX = 64
+# id(array) -> (weakref, canonical-u8 bytes): per-object digest memo so a
+# device-resident pattern pays its device_get round-trip ONCE, not on every
+# cache probe.  The weakref guards against id() reuse after GC: a recycled
+# id maps to a dead (or different) referent and falls through to recompute.
+_DIGEST_MEMO: dict = {}
+_DIGEST_MEMO_MAX = 256
+
+
+def _pattern_cache_token(p) -> bytes:
+    """Canonical uint8 bytes of one pattern WITHOUT a device round-trip on
+    the hot path: host types are serialized directly; device arrays hit a
+    per-object digest memo (keyed by id + weakref identity) so only the
+    first sighting of an array object pays jax.device_get."""
+    if isinstance(p, (bytes, bytearray, memoryview)):
+        return bytes(p)
+    if isinstance(p, str):
+        return p.encode("utf-8", errors="surrogateescape")
+    if isinstance(p, np.ndarray):
+        a = p if p.dtype == np.uint8 else p.astype(np.uint8)
+        return a.tobytes()
+    if isinstance(p, (list, tuple)):
+        return np.asarray(p).astype(np.uint8).tobytes()
+    ent = _DIGEST_MEMO.get(id(p))
+    if ent is not None:
+        ref, tok = ent
+        if ref() is p:
+            return tok
+    tok = bytes(np.asarray(jax.device_get(as_u8(p))))
+    try:
+        if len(_DIGEST_MEMO) >= _DIGEST_MEMO_MAX:
+            # drop dead entries first; fall back to clearing (rare)
+            for i in [i for i, (r, _) in _DIGEST_MEMO.items() if r() is None]:
+                del _DIGEST_MEMO[i]
+            if len(_DIGEST_MEMO) >= _DIGEST_MEMO_MAX:
+                _DIGEST_MEMO.clear()
+        _DIGEST_MEMO[id(p)] = (weakref.ref(p), tok)
+    except TypeError:
+        pass  # not weakref-able: stay correct, just uncached
+    return tok
 
 
 def compile_patterns_cached(
@@ -355,10 +450,10 @@ def compile_patterns_cached(
     The convenience wrappers (find_multi & co., the batched kernels) receive
     raw pattern stacks per call; without this, every call would pay the
     host-side plan build (2^17 LUT allocation + upload) that PatternSet
-    amortizes by construction."""
-    key = (k,) + tuple(
-        bytes(np.asarray(jax.device_get(as_u8(p)))) for p in patterns
-    )
+    amortizes by construction.  Key construction is transfer-free on cache
+    hits: a repeat call with the same (live) device arrays costs dict probes
+    only, no jax.device_get (see _pattern_cache_token)."""
+    key = (k,) + tuple(_pattern_cache_token(p) for p in patterns)
     plans = _PLAN_CACHE.get(key)
     if plans is None:
         plans = compile_patterns(patterns, k=k)
@@ -380,8 +475,11 @@ def _valid_starts(index: TextIndex, m: int) -> jnp.ndarray:
     return jnp.arange(n, dtype=jnp.int32)[None, :] <= (index.lengths[:, None] - m)
 
 
-def _match_group_a(index: TextIndex, plan: PatternPlan) -> jnp.ndarray:
+def _match_group_a(
+    index: TextIndex, plan: PatternPlan, bank: Optional[FingerprintBank] = None
+) -> jnp.ndarray:
     """m < 4: dense shifted byte compares (EPSMa, batched over B and P)."""
+    del bank  # no fingerprint machinery in this regime
     t = index.text
     acc = _valid_starts(index, plan.m)[:, None, :]
     for j in range(plan.m):
@@ -399,12 +497,17 @@ def _dense_b(index: TextIndex, plan: PatternPlan) -> jnp.ndarray:
     return acc
 
 
-def _b_candidates(index: TextIndex, plan: PatternPlan):
+def _b_candidates(
+    index: TextIndex, plan: PatternPlan, bank: Optional[FingerprintBank] = None
+):
     """Shared-text candidate generation for EPSMb: one O(n) fingerprint +
-    union-LUT probe (independent of P), compacted to CAND_BLOCK granularity."""
+    union-LUT probe (independent of P), compacted to CAND_BLOCK granularity.
+    With a FingerprintBank the fingerprint is a shared-prefix read instead
+    of a full per-group recomputation."""
     B, n = index.text.shape
-    offsets = _word_offsets(plan.m)
-    h = _window_fingerprint(index.packed, offsets, plan.kbits)  # (B, n)
+    if bank is None:
+        bank = FingerprintBank(index.packed)
+    h = bank.window_fp(plan.m, plan.kbits)  # (B, n)
     cand = plan.lut_any[h] & _valid_starts(index, plan.m)
     C = CAND_BLOCK
     nblk = -(-n // C)
@@ -469,7 +572,10 @@ def _dense_count(index: TextIndex, plan: PatternPlan, dense_fn) -> jnp.ndarray:
     return dense_fn(index, plan).sum(-1, dtype=jnp.int32)
 
 
-def _match_group_b(index: TextIndex, plan: PatternPlan) -> jnp.ndarray:
+def _match_group_b(
+    index: TextIndex, plan: PatternPlan, bank: Optional[FingerprintBank] = None
+) -> jnp.ndarray:
+    del bank  # dense path — no text-side fingerprint
     # For full (B, P, n) masks the stacked-anchor dense compare is already
     # memory-bound optimal on this backend (the output write dominates), and
     # a candidate scatter of the same size measured ~70x slower.  The union
@@ -501,15 +607,30 @@ def _b_verify_pid(index: TextIndex, plan: PatternPlan, blk_any, budget, nblk):
     return ok.astype(jnp.int32), bvec, pid
 
 
-def _count_group_b(index: TextIndex, plan: PatternPlan) -> jnp.ndarray:
+# Sparse-vs-dense cliff for the EPSMb count path: the sparse machinery pays
+# once the dense (B, P, n) mask would fall out of cache during the reduce
+# (measured ~8 MB of mask on this backend); below it, or for tiny pattern
+# sets, dense wins.  Shared by the per-group and multi-group count paths.
+SPARSE_B_MIN_ELEMS = 8_000_000
+
+
+def _sparse_b_eligible(index: TextIndex, plan: PatternPlan) -> bool:
+    B, n = index.text.shape
+    return (
+        n >= 4 * CAND_BLOCK
+        and plan.n_patterns >= 4
+        and B * n * plan.n_patterns >= SPARSE_B_MIN_ELEMS
+    )
+
+
+def _count_group_b(
+    index: TextIndex, plan: PatternPlan, bank: Optional[FingerprintBank] = None
+) -> jnp.ndarray:
     B, n = index.text.shape
     P = plan.n_patterns
-    # The sparse path pays once the dense (B, P, n) mask would fall out of
-    # cache during the reduce (measured cliff ~8 MB of mask on this
-    # backend); below that, or for tiny pattern sets, dense wins.
-    if n < 4 * CAND_BLOCK or P < 4 or B * n * P < 8_000_000:
+    if not _sparse_b_eligible(index, plan):
         return _dense_count(index, plan, _dense_b)
-    blk_any, budget, nblk = _b_candidates(index, plan)
+    blk_any, budget, nblk = _b_candidates(index, plan, bank)
 
     def sparse_pid(_):
         ok, bvec, pid = _b_verify_pid(index, plan, blk_any, budget, nblk)
@@ -535,6 +656,100 @@ def _count_group_b(index: TextIndex, plan: PatternPlan) -> jnp.ndarray:
         lambda _: _dense_count(index, plan, _dense_b),
         None,
     )
+
+
+def _count_groups_b_shared(
+    index: TextIndex, plans: Sequence[PatternPlan], bank: FingerprintBank
+) -> jnp.ndarray:
+    """Multi-group EPSMb counting with ONE shared candidate pass.
+
+    The per-group sparse path pays an O(n) fingerprint + LUT probe AND an
+    O(n) compaction (block reduce, fixed-budget nonzero, candidate-row
+    gather + repack) PER GROUP.  Here the G groups share everything the
+    algebra allows (DESIGN.md §9): fingerprints come off the
+    FingerprintBank's one prefix accumulation; the candidate block masks are
+    OR'd into one union; ONE nonzero + ONE row gather (spanning max_m)
+    serves every group, which then only verifies its own patterns on the
+    shared gathered rows — on a second, rows-sized FingerprintBank for the
+    distinct-fingerprint pid fast path.  G length groups thus cost one pass
+    over ``packed`` + one compaction instead of G of each.
+
+    Exactness matches the per-group path: the union mask is a superset of
+    every group's candidate blocks, verification is the same anchor-word
+    compare, and union-budget overflow falls back to the dense count for
+    ALL shared groups via lax.cond.
+    """
+    B, n = index.text.shape
+    C = CAND_BLOCK
+    nblk = -(-n // C)
+    max_m = max(p.m for p in plans)
+    union = None
+    for p in plans:
+        h = bank.window_fp(p.m, p.kbits)
+        cand = p.lut_any[h] & _valid_starts(index, p.m)
+        blk = (
+            jnp.pad(cand, ((0, 0), (0, nblk * C - n)))
+            .reshape(B, nblk, C)
+            .any(-1)
+        )
+        union = blk if union is None else union | blk
+    exp = sum((B * n * p.n_patterns) >> p.kbits for p in plans)
+    # Tighter budget than the per-group path's (B*nblk)//3 heavy-tail slack:
+    # every verification op here is paid G-groups-deep on the shared rows,
+    # so over-provisioning is G times as expensive, while the dense fallback
+    # below still guarantees exactness when a pathological pattern set
+    # overflows.  16x the expected-collision mass (vs 4x per-group) plus an
+    # nblk/16 floor keeps benign extracted-pattern workloads sparse.
+    budget = int(min(B * nblk, max(4096, 16 * exp + 8 * B, (B * nblk) // 16)))
+
+    def sparse(_):
+        rows_packed, bvec, bstart, live = _gather_candidate_rows(
+            index, max_m, union, budget, nblk
+        )
+        row_bank = FingerprintBank(rows_packed)
+        starts = bstart[:, None] + jnp.arange(C, dtype=jnp.int32)[None, :]
+        outs = []
+        for p in plans:
+            in_row = starts <= (index.lengths[bvec][:, None] - p.m)
+            ok_pos = in_row & live[:, None]
+            if p.distinct:
+                # pid fast path on the shared rows: O(nb * C) per group
+                h = row_bank.window_fp(p.m, p.kbits)[:, :C]
+                pid = p.lut_pid[h]
+                sel = p.anchors[pid]  # (nb, C, nw)
+                ok = p.lut_any[h]
+                for i, o in enumerate(_word_offsets(p.m)):
+                    ok = ok & (rows_packed[:, o : o + C] == sel[:, :, i])
+                ok = (ok & ok_pos).astype(jnp.int32)
+                counts = jnp.zeros((B, p.n_patterns), jnp.int32)
+                outs.append(
+                    counts.at[bvec[:, None], pid].add(ok, mode="drop")
+                )
+            else:
+                ok = None
+                for i, o in enumerate(_word_offsets(p.m)):
+                    eq = (
+                        rows_packed[:, o : o + C, None]
+                        == p.anchors[None, None, :, i]
+                    )
+                    ok = eq if ok is None else ok & eq
+                ok = ok & ok_pos[:, :, None]
+                sums = jnp.einsum(
+                    "bcp,c->bp", ok.astype(jnp.float32),
+                    jnp.ones((C,), jnp.float32),
+                )
+                counts = jnp.zeros((B, p.n_patterns), jnp.float32)
+                outs.append(
+                    counts.at[bvec].add(sums, mode="drop").astype(jnp.int32)
+                )
+        return jnp.concatenate(outs, axis=1)
+
+    def dense(_):
+        return jnp.concatenate(
+            [_dense_count(index, p, _dense_b) for p in plans], axis=1
+        )
+
+    return lax.cond(union.sum(dtype=jnp.int32) <= budget, sparse, dense, None)
 
 
 # Fallback for EPSMc overflow: dense shifted byte compares — O(m) passes but
@@ -599,7 +814,10 @@ def _c_verify(index, plan, ht, cand, stride, noff_used, budget):
     return ok_all, b_all, st_all
 
 
-def _match_group_c(index: TextIndex, plan: PatternPlan) -> jnp.ndarray:
+def _match_group_c(
+    index: TextIndex, plan: PatternPlan, bank: Optional[FingerprintBank] = None
+) -> jnp.ndarray:
+    del bank  # keyed by aligned block fingerprints, not window fingerprints
     B, n = index.text.shape
     P = plan.n_patterns
     if index.block_fp.shape[1] == 0:
@@ -619,7 +837,10 @@ def _match_group_c(index: TextIndex, plan: PatternPlan) -> jnp.ndarray:
     )
 
 
-def _count_group_c(index: TextIndex, plan: PatternPlan) -> jnp.ndarray:
+def _count_group_c(
+    index: TextIndex, plan: PatternPlan, bank: Optional[FingerprintBank] = None
+) -> jnp.ndarray:
+    del bank  # keyed by aligned block fingerprints, not window fingerprints
     B = index.batch
     if index.block_fp.shape[1] == 0:
         return _dense_c(index, plan).sum(-1, dtype=jnp.int32)
@@ -640,7 +861,9 @@ def _count_group_c(index: TextIndex, plan: PatternPlan) -> jnp.ndarray:
 
 _MATCH = {"a": _match_group_a, "b": _match_group_b, "c": _match_group_c}
 _COUNT = {
-    "a": lambda idx, plan: _match_group_a(idx, plan).sum(-1, dtype=jnp.int32),
+    "a": lambda idx, plan, bank=None: _match_group_a(idx, plan).sum(
+        -1, dtype=jnp.int32
+    ),
     "b": _count_group_b,
     "c": _count_group_c,
 }
@@ -669,11 +892,12 @@ def match_many(
     bit-identical to the pre-approx engine."""
     if not plans:
         return jnp.zeros((index.batch, 0, index.n), jnp.bool_)
+    bank = FingerprintBank(index.packed)
     outs = []
     for p in plans:
         kk = _effective_k(p, k)
         if kk == 0:
-            outs.append(_MATCH[p.regime](index, p))
+            outs.append(_MATCH[p.regime](index, p, bank))
         else:
             from repro.approx import counting
 
@@ -688,18 +912,43 @@ def count_many(
     exact and relaxed-gated paths never materialize the (B, P, n) mask.
     ``k`` as in :func:`match_many`; note the k > 0 DENSE path (small P,
     saturated or absent relaxed LUT, or candidate overflow) does build the
-    (B, P, n) mismatch mask before reducing."""
+    (B, P, n) mismatch mask before reducing.
+
+    All groups draw their window fingerprints from ONE FingerprintBank
+    prefix accumulation, and >= 2 sparse-eligible EPSMb groups additionally
+    share a single candidate compaction (_count_groups_b_shared) — G length
+    groups cost one pass over the packed view, not G (DESIGN.md §9)."""
     if not plans:
         return jnp.zeros((index.batch, 0), jnp.int32)
-    outs = []
-    for p in plans:
+    bank = FingerprintBank(index.packed)
+    outs: List[Any] = [None] * len(plans)
+    # >= 2 exact EPSMb groups on the sparse path: count them together
+    # through the shared candidate pass (one fingerprint traversal + one
+    # compaction for all of them — see _count_groups_b_shared)
+    shared = [
+        i
+        for i, p in enumerate(plans)
+        if _effective_k(p, k) == 0
+        and p.regime == "b"
+        and _sparse_b_eligible(index, p)
+    ]
+    if len(shared) >= 2:
+        joint = _count_groups_b_shared(index, [plans[i] for i in shared], bank)
+        col = 0
+        for i in shared:
+            P = plans[i].n_patterns
+            outs[i] = joint[:, col : col + P]
+            col += P
+    for i, p in enumerate(plans):
+        if outs[i] is not None:
+            continue
         kk = _effective_k(p, k)
         if kk == 0:
-            outs.append(_COUNT[p.regime](index, p))
+            outs[i] = _COUNT[p.regime](index, p, bank)
         else:
             from repro.approx import counting
 
-            outs.append(counting.count_group_approx(index, p, kk))
+            outs[i] = counting.count_group_approx(index, p, kk, bank)
     return jnp.concatenate(outs, axis=1)
 
 

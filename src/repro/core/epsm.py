@@ -282,14 +282,47 @@ def select_algo_tuned(m: int) -> str:
     return "epsmc"
 
 
-def find(text, pattern, *, algo: str = "auto", k: int = 0) -> jnp.ndarray:
+# Auto-streaming threshold for host-side inputs (repro.core.stream,
+# DESIGN.md §9): above this, find/count scan in O(chunk) device memory via
+# the StreamScanner instead of materializing the ~9 bytes/byte resident
+# index.  Device-resident inputs never auto-stream (they already fit).
+STREAM_AUTO_BYTES = 1 << 26
+
+
+def _host_bytes(text) -> int:
+    """Length of a HOST-side text (0 for device arrays: never auto-stream)."""
+    if isinstance(text, (bytes, bytearray, memoryview, str)):
+        return len(text)
+    import numpy as _np
+
+    if isinstance(text, _np.ndarray):
+        return text.size
+    return 0
+
+
+def find(text, pattern, *, algo: str = "auto", k: int = 0,
+         stream: Optional[bool] = None) -> jnp.ndarray:
     """Match-start mask for all occurrences of pattern in text.
 
     ``k`` is a Hamming mismatch budget (repro.approx, DESIGN.md §8): k > 0
     reports every position whose m-byte window differs from the pattern in
     at most k bytes (``algo`` is ignored — the engine's packed counting
     filter replaces the regime dispatch).  k=0 is the exact paper path.
+
+    ``stream`` is the bounded-memory escape hatch (repro.core.stream,
+    DESIGN.md §9): True scans the text chunk-by-chunk in O(chunk) device
+    memory and returns a HOST bool mask (``algo`` is ignored — the engine's
+    regime dispatch runs per chunk); None auto-enables it for host-side
+    texts >= STREAM_AUTO_BYTES, but ONLY under the default regime dispatch —
+    an explicit ``algo`` request always runs resident as asked.  Results are
+    identical to the resident scan.
     """
+    if stream is None:
+        stream = algo == "auto" and _host_bytes(text) >= STREAM_AUTO_BYTES
+    if stream:
+        from repro.core.stream import find_stream
+
+        return find_stream(text, pattern, k=k)
     t, p = _to_arrays(text, pattern)
     m = p.shape[0]
     if m == 0:
@@ -311,15 +344,25 @@ def find(text, pattern, *, algo: str = "auto", k: int = 0) -> jnp.ndarray:
     return _ALGOS[name](t, p)
 
 
-def count(text, pattern, *, algo: str = "auto", k: int = 0) -> jnp.ndarray:
-    return find(text, pattern, algo=algo, k=k).sum(dtype=jnp.int32)
+def count(text, pattern, *, algo: str = "auto", k: int = 0,
+          stream: Optional[bool] = None) -> jnp.ndarray:
+    """Occurrence count; ``stream`` as in :func:`find` — the streaming path
+    never materializes a whole-text mask (device OR host)."""
+    if stream is None:
+        stream = algo == "auto" and _host_bytes(text) >= STREAM_AUTO_BYTES
+    if stream:
+        from repro.core.stream import stream_count
+
+        return stream_count(text, [pattern], k=k)[0]
+    return find(text, pattern, algo=algo, k=k, stream=False).sum(dtype=jnp.int32)
 
 
-def positions(text, pattern, *, algo: str = "auto", k: int = 0):
+def positions(text, pattern, *, algo: str = "auto", k: int = 0,
+              stream: Optional[bool] = None):
     """Occurrence start positions (host-side; forces a sync)."""
     import numpy as np
 
-    mask = jax.device_get(find(text, pattern, algo=algo, k=k))
+    mask = jax.device_get(find(text, pattern, algo=algo, k=k, stream=stream))
     return np.nonzero(mask)[0]
 
 

@@ -111,6 +111,7 @@ class PatternSet:
         self.order = engine.plan_order(self.plans)
         # group-major (seed-compatible) order of the original patterns
         self.groups = {p.m: p.patterns for p in self.plans}
+        self._scanners: dict = {}  # chunk_bytes -> StreamScanner (reusable)
 
     def index(self, text_or_batch, lengths=None) -> engine.TextIndex:
         return engine.build_index(text_or_batch, lengths)
@@ -132,3 +133,17 @@ class PatternSet:
         """Concatenated per-pattern occurrence counts (group order)."""
         idx = engine.build_index(as_u8(text))
         return engine.count_many_jit(idx, self.plans)[0]
+
+    def contains_any_stream(self, source, *, chunk_bytes: int = 1 << 22) -> bool:
+        """Bounded-memory verdict for one oversize document or byte stream
+        (repro.core.stream, DESIGN.md §9): O(chunk_bytes) device memory
+        regardless of document length, with early exit on a hit.  The
+        scanner (and its jit trace) is cached per chunk size, so a corpus
+        of oversize documents pays the setup once."""
+        sc = self._scanners.get(chunk_bytes)
+        if sc is None:
+            from repro.core.stream import StreamScanner
+
+            sc = StreamScanner(self.plans, chunk_bytes, k=self.k)
+            self._scanners[chunk_bytes] = sc
+        return sc.contains_any(source)

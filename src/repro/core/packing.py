@@ -88,6 +88,31 @@ def valid_start_mask(n: int, m: int) -> jnp.ndarray:
     return jnp.arange(n) <= (n - m)
 
 
+FP_MULT = np.uint32(2654435761)  # Knuth's multiplicative-hash constant
+# fixed odd salts mixing the packed words of one window into one fingerprint
+WORD_SALTS = np.uint32(
+    np.random.RandomState(0xE95).randint(1, 2**30, size=8) * 2 + 1
+)
+
+
+def fp_accum_word(v: jnp.ndarray, word: jnp.ndarray, salt_index: int) -> jnp.ndarray:
+    """Add one salted packed-word term to a running window-fingerprint sum.
+
+    The ONE definition of how a packed word enters the window fingerprint —
+    shared by the engine's matchers, the FingerprintBank prefix accumulation
+    (engine.py), and the Pallas multipattern kernel, so every consumer stays
+    keyed to the same LUTs.  uint32 adds wrap mod 2^32, making the sum
+    associative/commutative — the property the bank's prefix sharing needs."""
+    return v + word * jnp.uint32(int(WORD_SALTS[salt_index]))
+
+
+def fp_finalize(v: jnp.ndarray, kbits: int) -> jnp.ndarray:
+    """Final multiplicative mix + top-bits truncation of a salted sum."""
+    return ((v * jnp.uint32(int(FP_MULT))) >> jnp.uint32(32 - kbits)).astype(
+        jnp.int32
+    )
+
+
 def fingerprint_weights(beta: int, seed: int = 12345) -> jnp.ndarray:
     """Fixed pseudo-random odd int32 weights for the multiplicative hash.
 

@@ -1,0 +1,363 @@
+"""Streaming scan engine: bounded-memory single-pass matching over unbounded
+texts (DESIGN.md §9).
+
+The resident engine (core/engine.py) wants the whole corpus on device —
+``build_index`` materializes text + packed + block_fp for the full (B, n)
+batch, ~9 bytes of device memory per byte of input.  That blocks the
+ROADMAP's grep/log-scan/pipeline-filter workloads the moment a corpus
+outgrows the device.  This module answers the same count/any/positions
+queries EXACTLY over arbitrarily long inputs in O(chunk) device memory:
+
+  * :class:`StreamScanner` re-chunks any byte source (bytes, arrays, files,
+    iterables of chunks) into fixed-capacity windows, carries an
+    ``overlap`` tail of ``max_m - 1`` bytes (rounded up to the EPSMc beta
+    block so every window starts on a GLOBAL beta boundary — the
+    block-phase carry) across windows, and issues exactly ONE jitted
+    dispatch per chunk;
+
+  * seam exactness is by END-position attribution: a window counts only the
+    occurrences whose last byte falls in its newly-streamed region.  Any
+    occurrence ending there started at most max_m - 1 bytes earlier, i.e.
+    inside the carried overlap, so its full window is visible; occurrences
+    ending inside the overlap were already counted by the previous window
+    and are subtracted via a tiny (overlap-sized) prefix sub-index inside
+    the same dispatch.  Each occurrence is therefore counted exactly once —
+    no misses and no double counts at seams (invariants: DESIGN.md §9);
+
+  * the host/device loop is double-buffered: chunk i+1 is ``device_put``
+    while chunk i's dispatch computes (JAX dispatch is asynchronous), and
+    the device-side count accumulator is a donated buffer on accelerator
+    backends, so streaming adds no per-chunk sync and no growing state.
+
+Approximate plans stream too: a <= k-mismatch occurrence spans the same m
+bytes as an exact one, so the overlap/attribution argument is untouched and
+``count_many(..., k=k)`` (relaxed gate and all) simply runs per chunk.
+"""
+
+from __future__ import annotations
+
+import functools
+from collections import deque
+from typing import Iterator, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import engine
+from repro.core.engine import PatternPlan
+from repro.core.epsm import EPSMC_BETA
+
+# Default device window capacity (bytes).  ~4 MiB keeps per-chunk dispatch
+# overhead amortized while the whole working set (window + packed + block_fp
+# + fingerprint temporaries, ~9.5 bytes/byte) stays far below any device's
+# memory; tune per backend via StreamScanner(chunk_bytes=...).
+DEFAULT_CHUNK_BYTES = 1 << 22
+# read() granularity for file-like sources
+_READ_BYTES = 1 << 20
+
+def _round_up(x: int, mult: int) -> int:
+    return -(-x // mult) * mult
+
+
+def _as_chunks(source) -> Iterator[np.ndarray]:
+    """Normalize any byte source into an iterator of host uint8 arrays."""
+    if isinstance(source, str):
+        source = source.encode("utf-8", errors="surrogateescape")
+    if isinstance(source, (bytes, bytearray, memoryview)):
+        yield np.frombuffer(bytes(source), np.uint8)
+        return
+    if isinstance(source, np.ndarray):
+        a = source.reshape(-1)
+        yield a if a.dtype == np.uint8 else a.astype(np.uint8)
+        return
+    if isinstance(source, jax.Array):
+        yield np.asarray(jax.device_get(source)).astype(np.uint8).reshape(-1)
+        return
+    if hasattr(source, "read"):
+        while True:
+            b = source.read(_READ_BYTES)
+            if not b:
+                return
+            yield np.frombuffer(bytes(b), np.uint8)
+    else:
+        for piece in source:
+            yield from _as_chunks(piece)
+
+
+@functools.lru_cache(maxsize=1)
+def _jitted_count_step():
+    """Jit the chunk step lazily: donating the count accumulator lets XLA
+    reuse its buffer across chunks on accelerator backends (CPU ignores
+    donation and warns, so it is gated on the backend) — and the backend
+    query must NOT run at import time, or merely importing repro.core would
+    initialize XLA before the user can configure it."""
+    donate = (0,) if jax.default_backend() != "cpu" else ()
+    return functools.partial(
+        jax.jit, static_argnames=("ov", "k"), donate_argnums=donate
+    )(_count_step)
+
+
+def _count_step(counts, window, length, prev_ov, plans, *, ov: int, k):
+    """One streaming chunk: full-window counts minus overlap-prefix counts.
+
+    ``window`` is (N,) uint8 with ``length`` valid bytes, the first
+    ``prev_ov`` of which were carried from the previous window (0 for the
+    first chunk).  The subtraction removes exactly the occurrences whose
+    window lies entirely inside the carried prefix — the ones the previous
+    chunk already counted — so the sum over chunks is the whole-text count.
+    The prefix sub-index spans ``ov`` (static, <= max_m + beta - 2) bytes:
+    its cost is noise next to the O(N) window scan, and both run in this one
+    dispatch."""
+    idx = engine.build_index(window[None, :], jnp.asarray(length)[None])
+    c = engine.count_many(idx, plans, k=k)
+    if ov:
+        pre_idx = engine.build_index(
+            window[None, :ov], jnp.minimum(jnp.asarray(prev_ov), length)[None]
+        )
+        c = c - engine.count_many(pre_idx, plans, k=k)
+    return counts + c[0]
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def _mask_step(window, length, prev_ov, plans, *, k):
+    """(P_total, N) bool match-start mask for one chunk, de-duplicated at the
+    seam: a start survives iff its occurrence ENDS at or past ``prev_ov``
+    (ends inside the carried prefix belong to the previous chunk)."""
+    idx = engine.build_index(window[None, :], jnp.asarray(length)[None])
+    mask = engine.match_many(idx, plans, k=k)[0]
+    pos = jnp.arange(window.shape[0], dtype=jnp.int32)
+    keeps = []
+    for plan in plans:
+        keep = pos + (plan.m - 1) >= prev_ov
+        keeps.append(
+            jnp.broadcast_to(keep[None, :], (plan.n_patterns, window.shape[0]))
+        )
+    return mask & jnp.concatenate(keeps, axis=0)
+
+
+class StreamScanner:
+    """Chunked, double-buffered, exact streaming matcher for a plan set.
+
+    Device memory is O(chunk_bytes) regardless of input length; every chunk
+    costs exactly one jitted dispatch (``dispatch_count`` audits this).
+    Pattern rows are in plan-concatenated order, as everywhere in the
+    engine; ``order`` maps them back to the original pattern sequence.
+
+    ``k`` overrides the per-plan mismatch budget exactly like
+    ``engine.count_many(..., k=)``; None runs each plan at the budget it was
+    compiled for.
+    """
+
+    def __init__(
+        self,
+        plans: Sequence[PatternPlan],
+        chunk_bytes: int = DEFAULT_CHUNK_BYTES,
+        *,
+        k: Optional[int] = None,
+    ):
+        self.plans = tuple(plans)
+        if not self.plans:
+            raise ValueError("StreamScanner needs at least one PatternPlan")
+        self.k = k
+        self.max_m = max(p.m for p in self.plans)
+        # overlap >= max_m - 1 carries every possibly-straddling occurrence
+        # start; rounding up to the beta block keeps each window's start on
+        # a global beta boundary, so chunk-local aligned block fingerprints
+        # coincide with the global ones (EPSMc block-phase carry).
+        self.overlap = _round_up(self.max_m - 1, EPSMC_BETA)
+        window = max(int(chunk_bytes), self.overlap + EPSMC_BETA)
+        self.window_bytes = _round_up(window, EPSMC_BETA)
+        self.step_bytes = self.window_bytes - self.overlap
+        self.n_patterns = sum(p.n_patterns for p in self.plans)
+        self.order = engine.plan_order(self.plans)
+        self.dispatch_count = 0
+
+    # -- host-side re-chunking ---------------------------------------------
+
+    def _windows(self, source) -> Iterator[Tuple[np.ndarray, int, int, int]]:
+        """Yield (window (N,) uint8, valid_len, carry_len, base): fixed-
+        capacity host windows where window[:carry_len] re-feeds the previous
+        window's tail and ``base`` is the global position of window[0]."""
+        N, ov = self.window_bytes, self.overlap
+        pieces: deque = deque()
+        have = 0
+        carry = np.zeros(0, np.uint8)
+        base = 0
+        exhausted = False
+        it = _as_chunks(source)
+        while True:
+            while not exhausted and have < N - len(carry):
+                try:
+                    piece = next(it)
+                except StopIteration:
+                    exhausted = True
+                    break
+                if len(piece):
+                    pieces.append(piece)
+                    have += len(piece)
+            new_len = min(have, N - len(carry))
+            if new_len == 0:
+                return  # nothing newly streamed: no window to emit
+            win = np.zeros(N, np.uint8)
+            win[: len(carry)] = carry
+            filled = len(carry)
+            need = new_len
+            while need:
+                piece = pieces.popleft()
+                take = min(len(piece), need)
+                win[filled : filled + take] = piece[:take]
+                if take < len(piece):
+                    pieces.appendleft(piece[take:])
+                filled += take
+                need -= take
+            have -= new_len
+            L = len(carry) + new_len
+            yield win, L, len(carry), base
+            carry = win[max(0, L - ov) : L].copy() if ov else carry
+            base += L - len(carry)
+
+    # -- device loop --------------------------------------------------------
+
+    def _dispatch_count(self, counts, window_dev, length, prev_ov):
+        self.dispatch_count += 1
+        return _jitted_count_step()(
+            counts, window_dev, length, prev_ov, self.plans,
+            ov=self.overlap, k=self.k,
+        )
+
+    def count_many(self, source) -> np.ndarray:
+        """int32 (P_total,) exact occurrence counts over the whole stream.
+
+        Double-buffered: the (i+1)-th window's host->device transfer is
+        issued before the i-th window's (asynchronously dispatched) compute
+        is consumed, and nothing syncs until the final accumulator read."""
+        counts = jnp.zeros((self.n_patterns,), jnp.int32)
+        pending = None
+        for win, L, carry_len, _base in self._windows(source):
+            dev = jax.device_put(win)
+            if pending is not None:
+                counts = self._dispatch_count(counts, *pending)
+            pending = (dev, np.int32(L), np.int32(carry_len))
+        if pending is not None:
+            counts = self._dispatch_count(counts, *pending)
+        return np.asarray(jax.device_get(counts))
+
+    def any_many(self, source) -> np.ndarray:
+        """bool (P_total,) — does each pattern occur anywhere in the stream?"""
+        return self.count_many(source) > 0
+
+    def contains_any(self, source, *, sync_every: int = 8) -> bool:
+        """Scalar verdict with early exit: the accumulator is polled every
+        ``sync_every`` chunks so a hit near the head of a long stream stops
+        the scan without draining the source."""
+        counts = jnp.zeros((self.n_patterns,), jnp.int32)
+        pending = None
+        chunks = 0
+        for win, L, carry_len, _base in self._windows(source):
+            dev = jax.device_put(win)
+            if pending is not None:
+                counts = self._dispatch_count(counts, *pending)
+                chunks += 1
+                if chunks % sync_every == 0 and bool(counts.sum() > 0):
+                    return True
+            pending = (dev, np.int32(L), np.int32(carry_len))
+        if pending is not None:
+            counts = self._dispatch_count(counts, *pending)
+        return bool(np.asarray(jax.device_get(counts)).sum() > 0)
+
+    def masks(self, source) -> Iterator[Tuple[int, int, np.ndarray]]:
+        """Yield (base, new_start, (P_total, L) bool) per chunk: the seam-
+        deduped match-start mask of the chunk's valid bytes.  A start at
+        column j is global position base + j; every occurrence appears in
+        exactly one yielded mask.  ``new_start`` is the carried-prefix
+        length (starts before new_start - max_m + 1 are always False)."""
+        pending = None
+        for win, L, carry_len, base in self._windows(source):
+            dev = jax.device_put(win)
+            if pending is not None:
+                yield self._flush_mask(*pending)
+            pending = (dev, np.int32(L), np.int32(carry_len), base, L)
+        if pending is not None:
+            yield self._flush_mask(*pending)
+
+    def _flush_mask(self, dev, length, prev_ov, base, L):
+        self.dispatch_count += 1
+        mask = _mask_step(dev, length, prev_ov, self.plans, k=self.k)
+        return base, int(prev_ov), np.asarray(jax.device_get(mask))[:, :L]
+
+    def positions_many(self, source) -> List[np.ndarray]:
+        """Per-pattern sorted global occurrence start positions (host side;
+        output-sized host memory, still O(chunk) device memory)."""
+        out: List[List[np.ndarray]] = [[] for _ in range(self.n_patterns)]
+        for base, _new_start, mask in self.masks(source):
+            for p_i in range(self.n_patterns):
+                (loc,) = np.nonzero(mask[p_i])
+                if len(loc):
+                    out[p_i].append(loc.astype(np.int64) + base)
+        return [
+            np.concatenate(o) if o else np.zeros(0, np.int64) for o in out
+        ]
+
+    # -- accounting ---------------------------------------------------------
+
+    @property
+    def device_bytes_per_chunk(self) -> int:
+        """Estimated peak device working set per chunk: window text (1) +
+        packed u32 view (4) + block fingerprints (0.5) + one fingerprint
+        temporary (4) per byte, plus the plan LUTs."""
+        per_byte = self.window_bytes + self.overlap
+        luts = 0
+        for p in self.plans:
+            luts += (1 << p.kbits)  # lut_any
+            if p.lut_pid is not None:
+                luts += 4 * (1 << p.kbits)
+            if p.lut_bits is not None:
+                luts += 4 * p.lut_bits.shape[-1] * (1 << p.kbits)
+            if p.relaxed_lut is not None:
+                luts += (1 << p.kbits)
+        return int(9.5 * per_byte) + luts
+
+
+# ---------------------------------------------------------------------------
+# Convenience wrappers (the epsm.find/count stream= escape hatch lands here)
+# ---------------------------------------------------------------------------
+
+def stream_count(
+    source,
+    patterns: Sequence,
+    *,
+    k: int = 0,
+    chunk_bytes: int = DEFAULT_CHUNK_BYTES,
+) -> np.ndarray:
+    """int32 (P,) exact (or <= k-mismatch) counts in ORIGINAL pattern order."""
+    plans = engine.compile_patterns_cached(list(patterns), k=k)
+    sc = StreamScanner(plans, chunk_bytes, k=k)
+    counts = sc.count_many(source)
+    out = np.zeros_like(counts)
+    out[sc.order] = counts
+    return out
+
+
+def find_stream(
+    source,
+    pattern,
+    *,
+    k: int = 0,
+    chunk_bytes: int = DEFAULT_CHUNK_BYTES,
+) -> np.ndarray:
+    """Whole-stream bool match-start mask for ONE pattern, assembled on the
+    host chunk by chunk (host memory is O(n); device stays O(chunk))."""
+    plans = engine.compile_patterns_cached([pattern], k=k)
+    sc = StreamScanner(plans, chunk_bytes, k=k)
+    out = np.zeros(sc.window_bytes, bool)
+    n = 0
+    for base, _new_start, mask in sc.masks(source):
+        end = base + mask.shape[1]
+        if end > len(out):
+            out = np.resize(out, max(2 * len(out), end))
+            out[n:] = False
+        out[base:end] |= mask[0]
+        n = max(n, end)
+    return out[:n]

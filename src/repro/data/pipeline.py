@@ -12,7 +12,10 @@ bounded) and a single engine dispatch verdicts the whole batch against every
 blocklist pattern at once.  The seed pipeline dispatched once per document x
 length group — pure dispatch overhead at corpus scale.  Padding rows carry
 their true lengths, so patterns never match inside padding or across
-document boundaries.
+document boundaries.  Documents larger than MAX_FILTER_LEN stream through
+the bounded-memory scanner (repro.core.stream, DESIGN.md §9) instead of
+inflating any batch: device memory stays O(MAX_FILTER_LEN) however large a
+document gets.
 """
 
 from __future__ import annotations
@@ -152,8 +155,13 @@ class LMDataPipeline:
                 hit[small] = verdict[: len(small)]
             for i, d in enumerate(docs):
                 if len(d) > MAX_FILTER_LEN:
-                    # oversize: own dispatch, no batch-wide padding blowup
-                    hit[i] = bool(self.pattern_set.contains_any(d))
+                    # oversize: stream through the bounded-memory scanner —
+                    # O(chunk) device memory and early exit on a hit,
+                    # instead of a full-size singleton dispatch that would
+                    # materialize ~9 bytes/byte of index for one document
+                    hit[i] = self.pattern_set.contains_any_stream(
+                        d, chunk_bytes=MAX_FILTER_LEN
+                    )
             kept = [d for d, h in zip(docs, hit) if not h]
             self.stats.docs_blocked += len(docs) - len(kept)
             yield kept

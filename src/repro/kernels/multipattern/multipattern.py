@@ -29,7 +29,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.core.engine import _FP_MULT, _WORD_SALTS, _word_offsets
+from repro.core.engine import _word_offsets, fp_accum_word, fp_finalize
 
 DEFAULT_TILE = 4096
 PACK = 4
@@ -62,15 +62,14 @@ def _mp_kernel(
 
     if use_lut:
         # shared-LUT fingerprint (EPSMb regime only — the window fingerprint
-        # mixes the packed words exactly like core/engine.py, so only plans
-        # whose lut_any is keyed that way may gate the tile): one probe
-        # answers "any pattern here?" for all P
+        # mixes the packed words through the engine's fp_accum_word /
+        # fp_finalize substrate, so the tile stays keyed to the same union
+        # LUT as the resident and streaming paths): one probe answers "any
+        # pattern here?" for all P
         v = jnp.zeros((tile,), jnp.uint32)
         for i, o in enumerate(offsets):
-            v = v + words[o] * jnp.uint32(int(_WORD_SALTS[i]))
-        h = ((v * jnp.uint32(int(_FP_MULT))) >> jnp.uint32(32 - kbits)).astype(
-            jnp.int32
-        )
+            v = fp_accum_word(v, words[o], i)
+        h = fp_finalize(v, kbits)
         cand = lut_ref[h]  # (tile,) bool
     else:
         cand = jnp.ones((tile,), jnp.bool_)

@@ -109,6 +109,47 @@ def test_patternset_blocked_batch(rng):
     assert counts.shape == (2,)
 
 
+def test_count_many_shared_b_groups(rng, monkeypatch):
+    """>= 2 eligible EPSMb groups count through the shared candidate pass
+    (one union compaction for all groups — engine._count_groups_b_shared);
+    results must match the per-pattern reference exactly, including a group
+    with non-distinct fingerprints (duplicated pattern)."""
+    monkeypatch.setattr(engine, "SPARSE_B_MIN_ELEMS", 0)
+    t = make_text(rng, 4096, 4)
+    pats = []
+    for m in (5, 8, 12, 15):
+        for _ in range(4):
+            s = rng.randint(0, len(t) - m + 1)
+            pats.append(t[s : s + m].copy())
+    pats.append(pats[4].copy())  # duplicate: m=8 group loses `distinct`
+    plans = engine.compile_patterns(pats)
+    assert sum(
+        1 for p in plans if p.regime == "b" and engine._sparse_b_eligible(
+            engine.build_index(t), p
+        )
+    ) >= 2
+    idx = engine.build_index(t)
+    counts = np.asarray(engine.count_many(idx, plans))
+    for row, pid in enumerate(engine.plan_order(plans)):
+        want = int(np.asarray(epsm.find(t, pats[pid])).sum())
+        assert counts[0, row] == want, f"pattern {pid}"
+
+
+def test_count_many_shared_b_groups_overflow_dense(rng, monkeypatch):
+    """Adversarial density through the SHARED path: all-same-byte text makes
+    every block a union candidate, the budget overflows, and the dense
+    fallback must keep every group's counts exact."""
+    monkeypatch.setattr(engine, "SPARSE_B_MIN_ELEMS", 0)
+    t = np.zeros(2048, np.uint8)
+    pats = [np.zeros(8, np.uint8)] * 4 + [np.zeros(12, np.uint8)] * 4
+    plans = engine.compile_patterns(pats)
+    idx = engine.build_index(t)
+    counts = np.asarray(engine.count_many(idx, plans))
+    for row, pid in enumerate(engine.plan_order(plans)):
+        want = baselines.naive_np(t, pats[pid]).sum()
+        assert counts[0, row] == want, f"pattern {pid}"
+
+
 def test_adversarial_density_falls_back_dense(rng):
     """All-same-byte text x matching pattern: every position is a candidate;
     the budget overflows and the dense branch must keep the result exact."""

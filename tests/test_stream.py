@@ -1,0 +1,233 @@
+"""Streaming scan engine (core/stream.py): seam-equivalence against the
+resident engine, the one-dispatch-per-chunk and bounded-device-memory
+contracts, and the streaming consumers (epsm stream= hatch, blocklist
+pipeline oversize documents, plan-cache hot key, lazy stop-scanner sync)."""
+
+import io
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import engine, epsm
+from repro.core.stream import StreamScanner, find_stream, stream_count
+
+from conftest import make_text
+
+LENGTHS = (2, 4, 8, 13, 16, 32)
+# few distinct chunk sizes -> few jit traces; odd values put the seams at
+# unaligned, mid-beta-block offsets after the scanner's beta rounding
+CHUNKS = (96, 251, 1000)
+
+
+def _patterns(rng, text, k):
+    """One extracted (guaranteed-hit) pattern per length, plus one random."""
+    pats = []
+    for m in LENGTHS:
+        s = rng.randint(0, len(text) - m + 1)
+        pats.append(text[s : s + m].copy())
+        pats.append(rng.randint(0, 5, size=m).astype(np.uint8))
+    return pats
+
+
+def test_seam_equivalence_random_boundaries(rng):
+    """Property suite: for random texts split at random chunk boundaries,
+    streaming counts AND positions equal the whole-text resident engine for
+    m in {2, 4, 8, 13, 16, 32} and k in {0, 1}."""
+    for k in (0, 1):
+        for trial in range(3):
+            n = int(rng.randint(400, 3000))
+            text = make_text(rng, n, 4)
+            pats = _patterns(rng, text, k)
+            plans = engine.compile_patterns(pats, k=k)
+            idx = engine.build_index(text)
+            want_counts = np.asarray(engine.count_many_jit(idx, plans, k=k))[0]
+            want_mask = np.asarray(engine.match_many_jit(idx, plans, k=k))[0]
+            chunk = int(CHUNKS[trial % len(CHUNKS)])
+            sc = StreamScanner(plans, chunk, k=k)
+            got = sc.count_many(text)
+            np.testing.assert_array_equal(
+                got, want_counts, err_msg=f"k={k} chunk={chunk} n={n}"
+            )
+            pos = StreamScanner(plans, chunk, k=k).positions_many(text)
+            for p_i in range(len(pos)):
+                np.testing.assert_array_equal(
+                    pos[p_i], np.nonzero(want_mask[p_i])[0],
+                    err_msg=f"k={k} chunk={chunk} pattern row {p_i}",
+                )
+
+
+def test_seam_occurrence_straddles_every_phase():
+    """Planted occurrences crossing a chunk seam at EVERY straddle phase
+    (first byte in chunk i, last byte in chunk i+1, and everything between)
+    are found exactly once — including starts inside a beta block and starts
+    inside the final chunk's padding region."""
+    for m in (2, 4, 8, 13, 16, 32):
+        pat = np.full(m, 9, np.uint8)  # alphabet disjoint from the text
+        plans = engine.compile_patterns([pat])
+        sc = StreamScanner(plans, 256)
+        step = sc.step_bytes
+        text = make_text(np.random.RandomState(m), 3 * step + 11, 4)
+        # every start that makes the occurrence touch the first seam, plus
+        # one deep inside the (short, padded) final chunk
+        starts = [step - m + 1 + j for j in range(m + 1) if step - m + 1 + j >= 0]
+        starts += [2 * step + 5]
+        starts = sorted(
+            {s for s in starts if 0 <= s <= len(text) - m}
+        )
+        # plant with a >= 1 byte gap: abutting all-9 plants would merge into
+        # a run with extra (unplanned) occurrences of the all-9 pattern
+        planted, last_end = [], -1
+        for s in starts:
+            if s > last_end:
+                text[s : s + m] = pat
+                planted.append(s)
+                last_end = s + m
+        got = StreamScanner(plans, 256).count_many(text)
+        assert got.tolist() == [len(planted)], f"m={m}"
+        pos = StreamScanner(plans, 256).positions_many(text)
+        np.testing.assert_array_equal(pos[0], np.asarray(planted), f"m={m}")
+
+
+def test_one_dispatch_per_chunk_and_bounded_window(rng):
+    text = make_text(rng, 10_000, 4)
+    plans = engine.compile_patterns([text[50:58].copy(), text[300:316].copy()])
+    sc = StreamScanner(plans, 1024)
+    n_windows = sum(1 for _ in sc._windows(text))
+    sc.count_many(text)
+    assert sc.dispatch_count == n_windows  # exactly one jitted call per chunk
+    # device footprint is O(chunk), independent of the input length
+    assert sc.window_bytes < 2 * 1024 + sc.overlap + 8
+    assert sc.device_bytes_per_chunk < 64 * (1 << 17) + 32 * sc.window_bytes
+
+
+def test_sources_bytes_file_iterable_agree(rng):
+    text = make_text(rng, 5_000, 4)
+    plans = engine.compile_patterns([text[100:108].copy()])
+    sc = StreamScanner(plans, 512)
+    want = sc.count_many(text)
+    as_bytes = sc.count_many(text.tobytes())
+    as_file = sc.count_many(io.BytesIO(text.tobytes()))
+    ragged = np.array_split(text, [1, 7, 8, 1000, 1001, 4000])
+    as_iter = sc.count_many(iter(ragged))
+    assert want.tolist() == as_bytes.tolist() == as_file.tolist() == as_iter.tolist()
+
+
+def test_empty_and_short_sources(rng):
+    plans = engine.compile_patterns([np.arange(8, dtype=np.uint8)])
+    sc = StreamScanner(plans, 256)
+    assert sc.count_many(b"").tolist() == [0]
+    assert sc.dispatch_count == 0  # no chunk, no dispatch
+    short = np.arange(8, dtype=np.uint8)
+    assert StreamScanner(plans, 256).count_many(short).tolist() == [1]
+    assert StreamScanner(plans, 256).count_many(short[:5]).tolist() == [0]
+
+
+def test_stream_count_original_order_and_find_stream(rng):
+    text = make_text(rng, 20_000, 4)
+    pats = [text[70:102].copy(), text[10:12].copy(), text[500:508].copy()]
+    got = stream_count(text, pats, chunk_bytes=777)
+    for i, p in enumerate(pats):
+        assert got[i] == int(np.asarray(epsm.count(text, p))), i
+    mask = find_stream(text, pats[2], chunk_bytes=777)
+    np.testing.assert_array_equal(mask, np.asarray(epsm.find(text, pats[2])))
+
+
+def test_epsm_stream_escape_hatch(rng, monkeypatch):
+    """find/count with stream=True (and the auto threshold) are identical to
+    the resident scan."""
+    text = make_text(rng, 9_000, 4)
+    pat = text[123:131].copy()
+    want_mask = np.asarray(epsm.find(text, pat))
+    want_count = int(np.asarray(epsm.count(text, pat)))
+    np.testing.assert_array_equal(epsm.find(text, pat, stream=True), want_mask)
+    assert int(epsm.count(text, pat, stream=True)) == want_count
+    assert int(epsm.count(text, pat, k=1, stream=True)) == int(
+        np.asarray(epsm.count(text, pat, k=1))
+    )
+    # auto mode: host texts above the threshold stream without being asked
+    monkeypatch.setattr(epsm, "STREAM_AUTO_BYTES", 1024)
+    auto = epsm.find(text, pat)
+    assert isinstance(auto, np.ndarray)  # host mask: the streaming path ran
+    np.testing.assert_array_equal(auto, want_mask)
+    np.testing.assert_array_equal(
+        epsm.positions(text, pat), np.nonzero(want_mask)[0]
+    )
+
+
+def test_pipeline_oversize_docs_stream(rng, monkeypatch):
+    """Oversize documents take the bounded-memory streaming path and still
+    get exact blocklist verdicts."""
+    from repro.data import pipeline as pl
+
+    monkeypatch.setattr(pl, "MAX_FILTER_LEN", 512)
+    bad = b"\x07\x01\x07\x02\x07\x03"
+    clean_big = make_text(rng, 4_000, 4)
+    dirty_big = make_text(rng, 4_000, 4)
+    dirty_big[2_345 : 2_345 + len(bad)] = np.frombuffer(bad, np.uint8)
+    small = make_text(rng, 100, 4)
+    pipe = pl.LMDataPipeline(
+        [clean_big, dirty_big, small], seq_len=64, batch_size=1,
+        blocklist=[bad, b"\x06\x06\x06\x06\x06\x06\x06\x06"],
+    )
+    for _ in pipe:
+        pass
+    assert pipe.stats.docs_in == 3
+    assert pipe.stats.docs_blocked == 1  # dirty_big, found by the scanner
+    assert pipe.stats.docs_out == 2
+
+
+def test_plan_cache_hit_no_device_transfer(monkeypatch):
+    """compile_patterns_cached: a repeat call with the same live device
+    arrays must not touch the device — the memoized digest answers."""
+    pats = [
+        jnp.asarray(np.frombuffer(b"streaming!", np.uint8)),
+        jnp.asarray(np.frombuffer(b"does not sync", np.uint8)),
+    ]
+    first = engine.compile_patterns_cached(pats)  # warm: digests + plans
+    transfers = []
+    orig = jax.device_get
+
+    def counting_get(x):
+        transfers.append(type(x).__name__)
+        return orig(x)
+
+    monkeypatch.setattr(jax, "device_get", counting_get)
+    again = engine.compile_patterns_cached(pats)
+    assert transfers == []  # zero device transfers on the hot path
+    assert again is first  # and it really was a cache hit
+
+
+def test_stop_scanner_lazy_sync_identical(rng, monkeypatch):
+    """StopScanner with the scalar-gated transfer: hit matrices identical to
+    the naive scan, and the (B, P) device_get happens ONLY on steps with at
+    least one hit."""
+    from repro.serve.engine import StopScanner
+
+    stops = [b"\x00\x01", b"\x01\x02\x00"]
+    stream = bytes(rng.randint(0, 3, size=60).astype(np.uint8))
+    sc = StopScanner(stops, 1, len(stream))
+    transfers = []
+    orig = jax.device_get
+
+    def counting_get(x):
+        transfers.append(1)
+        return orig(x)
+
+    monkeypatch.setattr(jax, "device_get", counting_get)
+    hit_steps = []
+    for step in range(len(stream)):
+        row = sc.scan(np.asarray([stream[step]], np.int32), step)[0]
+        want = np.asarray(
+            [
+                step >= len(s) - 1 and stream[step - len(s) + 1 : step + 1] == s
+                for s in stops
+            ]
+        )
+        np.testing.assert_array_equal(row, want, err_msg=f"step {step}")
+        if want.any():
+            hit_steps.append(step)
+    assert sc.dispatch_count == len(stream)
+    assert len(transfers) == len(hit_steps)  # matrix synced only on hits
+    assert len(hit_steps) > 0  # the gate was actually exercised both ways
