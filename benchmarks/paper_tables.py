@@ -88,24 +88,12 @@ def run_table(
 
 
 def format_table(results: Dict[str, Dict[int, float]], title: str) -> str:
-    lengths = sorted(next(iter(results.values())).keys())
-    lines = [f"### {title}", "", "| algo | " + " | ".join(f"m={m}" for m in lengths) + " |",
-             "|---|" + "---|" * len(lengths)]
-    # mark best per column
-    best = {m: min(r.get(m, np.inf) for r in results.values()) for m in lengths}
-    for name, row in results.items():
-        cells = []
-        for m in lengths:
-            v = row.get(m)
-            if v is None:
-                cells.append("-")
-            else:
-                s = f"{v*1e3:.2f}"
-                cells.append(f"**{s}**" if v == best[m] else s)
-        lines.append(f"| {name} | " + " | ".join(cells) + " |")
-    lines.append("")
-    lines.append("(ms per pattern, lower is better, best boldfaced)")
-    return "\n".join(lines)
+    """Delegates to the ONE grid renderer (benchmarks/render_tables.py) the
+    CI benchgate drift check also runs — interactive callers and the gate
+    can't format the same data two ways."""
+    from benchmarks.render_tables import format_paper_table
+
+    return format_paper_table(results, title)
 
 
 def table_genome(**kw):

@@ -1,0 +1,225 @@
+"""Schema gate + deterministic renderer for experiments/benchmarks/.
+
+The committed BENCH_*.json files ARE the repo's perf trajectory;
+``experiments/benchmarks/paper_tables.md`` is derived from them and from
+nothing else, so the markdown can never drift from the data.  CI's
+``benchgate`` job re-runs this script and fails the PR if the regenerated
+markdown differs from the committed one (or if any JSON violates its
+schema).
+
+    python benchmarks/render_tables.py [--check] [--dir experiments/benchmarks]
+
+Stdlib only on purpose: the gate needs no jax install.  The benchmark
+harness (benchmarks/run.py) imports the same renderer after refreshing the
+JSONs, so the two writers cannot disagree.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import sys
+from pathlib import Path
+
+MD_NAME = "paper_tables.md"
+
+# Every BENCH_*.json row must carry these; per-file extras below.
+ROW_REQUIRED = {
+    "name": str,
+    "us_per_call": (int, float),
+    "GBps": (int, float),
+    "size_bytes": int,
+}
+FILE_EXTRAS = {
+    "BENCH_multipattern.json": {"P": int, "B": int, "m": int,
+                                "speedup_vs_vmap": (int, float)},
+    "BENCH_approx.json": {"m": int, "k": int, "ratio_vs_exact": (int, float)},
+    "BENCH_stream.json": {},   # two row families; shared keys only
+    "BENCH_shard.json": {"shards": int, "speedup_vs_1shard": (int, float),
+                         "devices": int},
+}
+# BENCH_paper_tables.json is a dict, not a row list: validated separately.
+PAPER_JSON = "BENCH_paper_tables.json"
+
+
+class SchemaError(ValueError):
+    pass
+
+
+def _check_type(fname, where, key, val, types):
+    if not isinstance(val, types) or isinstance(val, bool):
+        raise SchemaError(
+            f"{fname}: {where}: field {key!r} should be "
+            f"{types}, got {type(val).__name__} ({val!r})"
+        )
+    if isinstance(val, float) and not math.isfinite(val):
+        raise SchemaError(f"{fname}: {where}: field {key!r} is not finite")
+
+
+def validate_rows(fname: str, rows) -> None:
+    if not isinstance(rows, list) or not rows:
+        raise SchemaError(f"{fname}: expected a non-empty list of row objects")
+    required = dict(ROW_REQUIRED, **FILE_EXTRAS.get(fname, {}))
+    for i, row in enumerate(rows):
+        if not isinstance(row, dict):
+            raise SchemaError(f"{fname}: row {i} is not an object")
+        where = f"row {i} ({row.get('name', '?')})"
+        for key, types in required.items():
+            if key not in row:
+                raise SchemaError(f"{fname}: {where}: missing field {key!r}")
+            _check_type(fname, where, key, row[key], types)
+        if row["us_per_call"] < 0 or row["GBps"] < 0 or row["size_bytes"] <= 0:
+            raise SchemaError(f"{fname}: {where}: non-positive measurement")
+
+
+def validate_paper(fname: str, doc) -> None:
+    if not isinstance(doc, dict) or "tables" not in doc or "size_bytes" not in doc:
+        raise SchemaError(f"{fname}: expected {{size_bytes, tables}}")
+    _check_type(fname, "top", "size_bytes", doc["size_bytes"], int)
+    for cname, table in doc["tables"].items():
+        if not isinstance(table, dict) or not table:
+            raise SchemaError(f"{fname}: corpus {cname!r}: empty table")
+        for algo, row in table.items():
+            for m, sec in row.items():
+                if not str(m).isdigit():
+                    raise SchemaError(f"{fname}: {cname}/{algo}: bad length {m!r}")
+                _check_type(fname, f"{cname}/{algo}/m={m}", "seconds", sec,
+                            (int, float))
+
+
+def format_paper_table(table: dict, title: str) -> str:
+    """algo -> {m(str|int): seconds} grid, ms per pattern, best bold —
+    the one renderer both benchmarks/run.py and the CI gate go through."""
+    lengths = sorted({int(m) for row in table.values() for m in row})
+    lines = [
+        f"### {title}",
+        "",
+        "| algo | " + " | ".join(f"m={m}" for m in lengths) + " |",
+        "|---|" + "---|" * len(lengths),
+    ]
+    best = {
+        m: min(
+            (float(row[k]) for row in table.values()
+             for k in row if int(k) == m),
+            default=float("inf"),
+        )
+        for m in lengths
+    }
+    for algo, row in table.items():
+        by_m = {int(k): float(v) for k, v in row.items()}
+        cells = []
+        for m in lengths:
+            v = by_m.get(m)
+            if v is None:
+                cells.append("-")
+            else:
+                s = f"{v * 1e3:.2f}"
+                cells.append(f"**{s}**" if v == best[m] else s)
+        lines.append(f"| {algo} | " + " | ".join(cells) + " |")
+    lines += ["", "(ms per pattern, lower is better, best boldfaced)"]
+    return "\n".join(lines)
+
+
+def _derived_cols(fname: str):
+    return [k for k in FILE_EXTRAS.get(fname, {}) if k not in ("P", "B", "m")]
+
+
+def format_rows_table(fname: str, rows) -> str:
+    extras = _derived_cols(fname)
+    # BENCH_stream rows carry family-specific ratio fields: surface whichever
+    # each row has, in one "derived" column, so both families render.
+    lines = [
+        f"### {fname}",
+        "",
+        "| name | µs/call | GB/s | MB | " + " | ".join(extras + ["derived"]) + " |",
+        "|---|" + "---|" * (4 + len(extras)),
+    ]
+    known = set(ROW_REQUIRED) | set(FILE_EXTRAS.get(fname, {}))
+    for row in rows:
+        cells = [
+            row["name"],
+            f"{row['us_per_call']:.1f}",
+            f"{row['GBps']:.3f}",
+            f"{row['size_bytes'] / 1e6:.0f}",
+        ]
+        cells += [f"{row[k]}" for k in extras]
+        derived = [
+            f"{k}={row[k]}"
+            for k in sorted(row)
+            if k not in known and isinstance(row[k], (int, float))
+            and not isinstance(row[k], bool)
+        ]
+        cells.append(";".join(derived) if derived else "-")
+        lines.append("| " + " | ".join(cells) + " |")
+    return "\n".join(lines)
+
+
+def render(outdir: Path) -> str:
+    parts = [
+        "# Benchmark trajectory (generated)",
+        "",
+        "Derived from the committed `BENCH_*.json` in this directory by",
+        "`python benchmarks/render_tables.py` — edit the JSONs (via",
+        "`python -m benchmarks.run`), never this file; CI's `benchgate` job",
+        "regenerates it and fails on drift.  Numbers are developer-measured",
+        "(XLA-CPU unless noted), NOT CI-measured.",
+    ]
+    paper = outdir / PAPER_JSON
+    if paper.exists():
+        doc = json.loads(paper.read_text())
+        validate_paper(PAPER_JSON, doc)
+        mb = doc["size_bytes"] / 1e6
+        titles = {"genome": "Table 1", "protein": "Table 2", "english": "Table 3"}
+        for cname, table in doc["tables"].items():
+            t = titles.get(cname, "Table")
+            parts += ["", format_paper_table(table, f"{t}: {cname} ({mb:.1f}MB)")]
+    for f in sorted(outdir.glob("BENCH_*.json")):
+        if f.name == PAPER_JSON:
+            continue
+        rows = json.loads(f.read_text())
+        validate_rows(f.name, rows)
+        parts += ["", format_rows_table(f.name, rows)]
+    return "\n".join(parts) + "\n"
+
+
+def write_markdown(outdir: Path) -> Path:
+    md = outdir / MD_NAME
+    md.write_text(render(outdir))
+    return md
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/benchmarks")
+    ap.add_argument(
+        "--check", action="store_true",
+        help="fail (exit 2) if the committed markdown differs from the "
+        "regenerated one instead of rewriting it",
+    )
+    args = ap.parse_args(argv)
+    outdir = Path(args.dir)
+    try:
+        text = render(outdir)
+    except SchemaError as e:
+        print(f"SCHEMA ERROR: {e}", file=sys.stderr)
+        return 1
+    md = outdir / MD_NAME
+    if args.check:
+        have = md.read_text() if md.exists() else ""
+        if have != text:
+            print(
+                f"{md} is stale: regenerate with "
+                "`python benchmarks/render_tables.py`",
+                file=sys.stderr,
+            )
+            return 2
+        print(f"{md} is in sync with the committed JSONs")
+        return 0
+    md.write_text(text)
+    print(f"wrote {md}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

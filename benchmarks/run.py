@@ -34,22 +34,33 @@ def timeit_median(fn, *args, reps: int = 7) -> float:
 
 
 def bench_paper_tables(size: int, full: bool, outdir: Path):
+    """Times the paper's Tables 1-3 and records them as machine-readable
+    BENCH_paper_tables.json — the markdown is rendered from that JSON by
+    benchmarks/render_tables.py (the same module CI's drift gate runs), so
+    the committed tables can never disagree with the committed data."""
+    import json
+
     from benchmarks import paper_tables as pt
 
     lengths = pt.FULL_M if full else pt.DEFAULT_M
-    md = []
-    for table_fn, cname, paper_table in (
-        (pt.table_genome, "genome", "Table 1"),
-        (pt.table_protein, "protein", "Table 2"),
-        (pt.table_english, "english", "Table 3"),
+    tables = {}
+    for table_fn, cname in (
+        (pt.table_genome, "genome"),
+        (pt.table_protein, "protein"),
+        (pt.table_english, "english"),
     ):
         res = table_fn(size=size, lengths=lengths, n_patterns=2)
-        md.append(pt.format_table(res, f"{paper_table}: {cname} ({size/1e6:.1f}MB)"))
+        tables[cname] = {
+            algo: {str(m): sec for m, sec in row.items()}
+            for algo, row in res.items()
+        }
         for algo, row in res.items():
             for m, sec in row.items():
                 _emit(f"paper/{cname}/{algo}/m{m}", sec * 1e6,
                       f"GBps={size/sec/1e9:.3f}")
-    (outdir / "paper_tables.md").write_text("\n\n".join(md))
+    (outdir / "BENCH_paper_tables.json").write_text(
+        json.dumps({"size_bytes": size, "tables": tables}, indent=1)
+    )
 
 
 def bench_kernels(size: int, outdir: Path):
@@ -311,6 +322,106 @@ def bench_stream(outdir: Path):
     (outdir / "BENCH_stream.json").write_text(json.dumps(rows, indent=1))
 
 
+def _bench_shard_child(outpath: str):
+    """Runs INSIDE the 8-forced-host-device subprocess bench_shard spawns:
+    times ShardedStreamScanner at 64 MB for shard counts {1, 2, 4, 8} vs the
+    1-shard StreamScanner baseline, cross-checking counts first, and writes
+    the BENCH_shard.json rows."""
+    import json
+
+    import jax
+
+    from repro.core import engine as eng
+    from repro.core.shard_stream import ShardedStreamScanner
+    from repro.core.stream import StreamScanner
+    from repro.data import corpus
+
+    size = 64_000_000
+    chunk = 1 << 22
+    ndev = len(jax.devices())
+    text = corpus.make_corpus("genome", size, seed=0)
+    pats = [text[i * 1009 : i * 1009 + 8].copy() for i in range(8)]
+    plans = eng.compile_patterns(list(pats))
+
+    base_sc = StreamScanner(plans, chunk)
+    base_sc.count_many(text[: 2 * base_sc.window_bytes])  # warm the trace
+    want = base_sc.count_many(text)
+
+    def run_base():
+        return StreamScanner(plans, chunk).count_many(text)
+
+    dt_1 = timeit_median(run_base, reps=3)
+    rows = [{
+        "name": "shard/stream_baseline/64mb",
+        "us_per_call": dt_1 * 1e6,
+        "GBps": size / dt_1 / 1e9,
+        "size_bytes": size,
+        "chunk_bytes": chunk,
+        "shards": 1,
+        "devices": ndev,
+        "speedup_vs_1shard": 1.0,
+    }]
+    for S in (1, 2, 4, 8):
+        sc = ShardedStreamScanner(plans, S, chunk)
+        got = sc.count_many(text)
+        assert np.array_equal(got, want), f"sharded/baseline divergence S={S}"
+
+        def run_sharded(S=S):
+            return ShardedStreamScanner(plans, S, chunk).count_many(text)
+
+        dt = timeit_median(run_sharded, reps=3)
+        rows.append({
+            "name": f"shard/sharded_{S}/64mb",
+            "us_per_call": dt * 1e6,
+            "GBps": size / dt / 1e9,
+            "size_bytes": size,
+            "chunk_bytes": chunk,
+            "shards": S,
+            "devices": ndev,
+            "speedup_vs_1shard": round(dt_1 / dt, 3),
+        })
+    Path(outpath).write_text(json.dumps(rows, indent=1))
+
+
+def bench_shard(outdir: Path):
+    """Sharded streaming vs 1-shard streaming at 64 MB (BENCH_shard.json).
+
+    Runs in a subprocess with XLA_FLAGS=--xla_force_host_platform_device_
+    count=8 (device count locks at first jax init, and the whole point is
+    per-shard device placement): shards round-robin over the 8 host devices
+    and their async dispatch queues drain concurrently, so the wall-clock
+    scaling measured here is the real multi-device pipeline, CPU-backed."""
+    import json
+    import os
+    import subprocess
+    import sys
+
+    out = outdir / "BENCH_shard.json"
+    env = {
+        **os.environ,
+        "XLA_FLAGS": "--xla_force_host_platform_device_count=8",
+        "JAX_PLATFORMS": "cpu",
+        "PYTHONPATH": "src" + os.pathsep + os.environ.get("PYTHONPATH", ""),
+    }
+    res = subprocess.run(
+        [
+            sys.executable, "-c",
+            "import sys; sys.path.insert(0, '.'); "
+            "from benchmarks.run import _bench_shard_child; "
+            "_bench_shard_child(sys.argv[1])",
+            str(out),
+        ],
+        env=env,
+        timeout=3600,
+    )
+    if res.returncode != 0:
+        raise RuntimeError("bench_shard subprocess failed")
+    for row in json.loads(out.read_text()):
+        _emit(row["name"], row["us_per_call"],
+              f"GBps={row['GBps']:.3f};shards={row['shards']};"
+              f"vs_1shard={row['speedup_vs_1shard']:.2f}x")
+
+
 def bench_pipeline(outdir: Path):
     from repro.data import corpus
     from repro.data.pipeline import LMDataPipeline
@@ -359,8 +470,14 @@ def main():
     # fixed sizes for the same reason: the stream rows (16/64/256 MB + the
     # 32 MB 3-group fingerprint-sharing rows) are the PR's perf trajectory
     bench_stream(outdir)
+    bench_shard(outdir)
     bench_pipeline(outdir)
     bench_roofline_report(outdir)
+    # regenerate the markdown from the refreshed JSONs through the SAME
+    # renderer CI's benchgate drift check runs
+    from benchmarks import render_tables
+
+    render_tables.write_markdown(outdir)
 
 
 if __name__ == "__main__":

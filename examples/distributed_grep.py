@@ -21,6 +21,7 @@ import jax.numpy as jnp  # noqa: E402
 
 from repro.core import baselines, distributed  # noqa: E402
 from repro.data import corpus  # noqa: E402
+from repro.dist.compat import make_mesh  # noqa: E402
 
 
 def main():
@@ -28,7 +29,7 @@ def main():
     text = corpus.make_corpus("english", n, seed=0)
     patterns = [b"the ", b"people", b"government "]
 
-    mesh = jax.make_mesh((8,), ("data",))
+    mesh = make_mesh((8,), ("data",))
     print(f"mesh: {mesh.devices.shape} over axis 'data'")
     find = distributed.make_distributed_find(mesh, "data")
     count = distributed.make_distributed_count(mesh, "data")

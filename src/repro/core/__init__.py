@@ -26,13 +26,17 @@ from repro.core.engine import (
     match_many,
 )
 from repro.core.multipattern import PatternSet, contains_any, count_multi, find_multi
-from repro.core.stream import StreamScanner, find_stream, stream_count
+from repro.core.stream import Compressed, StreamScanner, find_stream, stream_count
+from repro.core.shard_stream import ShardedStreamScanner, shard_stream_count
 from repro.core.baselines import BASELINES, naive_np
 
 __all__ = [
+    "Compressed",
     "FingerprintBank",
     "PatternPlan",
+    "ShardedStreamScanner",
     "StreamScanner",
+    "shard_stream_count",
     "TextIndex",
     "any_many",
     "build_index",

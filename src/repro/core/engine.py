@@ -398,6 +398,24 @@ def plan_order(plans: Sequence[PatternPlan]) -> np.ndarray:
     return np.asarray([i for plan in plans for i in plan.ids], np.int64)
 
 
+def replicate_plans(
+    plans: Sequence[PatternPlan], device
+) -> Tuple[PatternPlan, ...]:
+    """Copies of compiled plans committed to ``device`` (None = leave as is).
+
+    jit requires colocated inputs, so a scanner dispatching on a non-default
+    device needs the plan LUTs/anchors resident there.  The sharded stream
+    scanner calls this once per device and reuses the replicas for every
+    shard it places on that device — the FingerprintBank each dispatch builds
+    then reads the same device-local plan state, with no per-chunk transfer
+    (device_put of an already-resident array is a no-op)."""
+    if device is None:
+        return tuple(plans)
+    return jax.tree_util.tree_map(
+        lambda x: jax.device_put(x, device), tuple(plans)
+    )
+
+
 _PLAN_CACHE: dict = {}
 _PLAN_CACHE_MAX = 64
 # id(array) -> (weakref, canonical-u8 bytes): per-object digest memo so a

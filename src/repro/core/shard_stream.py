@@ -1,0 +1,384 @@
+"""Multi-host sharded streaming scans (DESIGN.md §10).
+
+The packed filter is embarrassingly parallel over text blocks: disjoint
+segments of one logical stream can be scanned independently as long as each
+carries an m-1 overlap across its left boundary (Belazzougui's word-RAM
+block-split argument, PAPERS.md).  PR 4's :class:`~repro.core.stream.
+StreamScanner` already enforces exactly that seam rule between chunks of ONE
+scan; this module applies it a second time, between SCANS:
+
+  * the stream is range-partitioned into per-shard byte ranges
+    ``[s_i, s_{i+1})`` with beta-aligned boundaries
+    (:func:`repro.dist.sharding.range_partition`), so every shard's windows
+    keep the global EPSMc block phase;
+
+  * shard i runs the ordinary StreamScanner chunk loop over its range with
+    the ``roundup(max_m - 1, beta)`` overlap prefix — the bytes immediately
+    before ``s_i`` — injected into its first window
+    (``count_many(..., prefix=, start=)``), and end-position attribution
+    makes it own exactly the occurrences whose last byte falls inside its
+    range: no misses, no double counts, for ANY shard count, including
+    shards narrower than ``max_m - 1`` and empty shards;
+
+  * results merge through ``repro.dist`` collectives: counts are summed
+    device-side (``compat.sum_across_devices`` — one cross-device reduce
+    over the shard axis) then psum'd across jax.distributed processes;
+    positions are already global (each shard's masks carry its byte
+    offset), so the merge is an offset-shifted concat gather — shard start
+    ranges are disjoint per pattern, so shard-order concatenation is
+    already sorted;
+
+  * a shard whose HOST loop fails (source error, short/truncated range
+    read, injected fault) is retried ``max_retries`` times by re-opening
+    its byte range and rescanning from scratch (``dist.fault_tolerance.
+    run_with_retries``); partial attempts are discarded, so a retried
+    shard's contribution is bit-identical to a clean pass.  Device-side
+    failures surface at the collective merge, NOT inside the retry scope —
+    the per-shard accumulators are deliberately never synced mid-scan
+    (syncing per shard would serialize the fleet), so a lost device raises
+    to the caller: loud, never an undercount.
+
+Within one process, shards round-robin over the local devices and each
+device's async dispatch queue drains concurrently (the host loop for shard
+i+1 overlaps the device compute of shard i); across processes, each process
+scans the shards ``i % process_count == process_index`` and merges through
+the multihost collectives.  Single host, single device, the sharded scan
+degenerates to the plain StreamScanner and is bit-identical to it.
+"""
+
+from __future__ import annotations
+
+import os
+import threading
+import weakref
+from typing import Iterator, List, Optional, Sequence
+
+import numpy as np
+
+import jax
+
+from repro.core import engine
+from repro.core.engine import PatternPlan
+from repro.core.epsm import EPSMC_BETA
+from repro.core.stream import (
+    DEFAULT_CHUNK_BYTES,
+    Compressed,
+    StreamScanner,
+    _as_chunks,
+)
+from repro.dist import compat
+from repro.dist.fault_tolerance import ShardRetry, run_with_retries
+from repro.dist.sharding import StreamShardSpec, make_stream_shard_spec
+
+# file-like sources share one OS handle between shards: reads go through a
+# per-handle lock so concurrently-scanned shards can't interleave seek/read
+_FILE_LOCKS: "weakref.WeakKeyDictionary" = weakref.WeakKeyDictionary()
+
+
+def _normalize_source(source):
+    if isinstance(source, str):
+        return source.encode("utf-8", errors="surrogateescape")
+    if isinstance(source, jax.Array):
+        return np.asarray(jax.device_get(source)).astype(np.uint8).reshape(-1)
+    if isinstance(source, np.ndarray):
+        a = source.reshape(-1)
+        return a if a.dtype == np.uint8 else a.astype(np.uint8)
+    return source
+
+
+def _is_sliceable(source) -> bool:
+    return isinstance(source, (bytes, bytearray, memoryview, np.ndarray))
+
+
+def source_total_bytes(source, total_bytes: Optional[int] = None) -> int:
+    """Logical length of a range-partitionable source.
+
+    Sliceable buffers and seekable files know their own length; callable
+    range sources need ``total_bytes`` (or a ``total_bytes`` attribute).
+    Compressed and one-shot-iterable sources cannot be range-partitioned —
+    there is no random access to hand each shard its own range."""
+    if total_bytes is not None:
+        return int(total_bytes)
+    source = _normalize_source(source)
+    if _is_sliceable(source):
+        return len(source)
+    if isinstance(source, os.PathLike):
+        return os.stat(os.fspath(source)).st_size
+    if hasattr(source, "seek") and hasattr(source, "read"):
+        pos = source.tell()
+        size = source.seek(0, os.SEEK_END)
+        source.seek(pos)
+        return int(size)
+    got = getattr(source, "total_bytes", None)
+    if got is not None:
+        return int(got)
+    if isinstance(source, Compressed):
+        raise TypeError(
+            "Compressed sources cannot be range-partitioned (no random "
+            "access); decompress to a file/buffer first, or stream it "
+            "unsharded through StreamScanner"
+        )
+    raise TypeError(
+        f"cannot determine the length of {type(source).__name__} source; "
+        "pass total_bytes= (and a callable open_range-style source)"
+    )
+
+
+def _file_pread_chunks(f, start: int, stop: int, lock) -> Iterator[np.ndarray]:
+    pos = start
+    while pos < stop:
+        n = min(1 << 20, stop - pos)
+        with lock:
+            f.seek(pos)
+            b = f.read(n)
+        if not b:
+            return  # short file: treat like an exhausted stream
+        pos += len(b)
+        yield np.frombuffer(bytes(b), np.uint8)
+
+
+def open_range(source, start: int, stop: int):
+    """A chunk source for bytes [start, stop) of the logical stream —
+    re-openable, so a failed shard can be rescanned from scratch.
+
+    Accepts sliceable buffers (zero-copy views), ``os.PathLike`` (a fresh
+    handle per range: shards on different devices read in parallel),
+    seekable file-likes (shared handle, per-handle read lock), and callables
+    ``source(start, stop) -> chunk source`` for object stores / remote
+    corpora."""
+    source = _normalize_source(source)
+    start, stop = int(start), int(stop)
+    if stop < start:
+        raise ValueError(f"bad range [{start}, {stop})")
+    if _is_sliceable(source):
+        return source[start:stop]
+    if isinstance(source, os.PathLike):
+
+        def gen():
+            with open(os.fspath(source), "rb") as f:
+                yield from _file_pread_chunks(f, start, stop, threading.Lock())
+
+        return gen()
+    if hasattr(source, "seek") and hasattr(source, "read"):
+        lock = _FILE_LOCKS.setdefault(source, threading.Lock())
+        return _file_pread_chunks(source, start, stop, lock)
+    if callable(source):
+        return source(start, stop)
+    raise TypeError(
+        f"{type(source).__name__} source supports no random access; "
+        "sharded scans need a sliceable buffer, path, seekable file, or "
+        "callable (start, stop) -> chunks"
+    )
+
+
+def read_range(source, start: int, stop: int) -> np.ndarray:
+    """Materialize bytes [start, stop) on the host (overlap prefixes only —
+    at most ``overlap`` bytes, never a shard body)."""
+    pieces, need = [], stop - start
+    for c in _as_chunks(open_range(source, start, stop)):
+        pieces.append(c[:need])
+        need -= len(pieces[-1])
+        if need <= 0:
+            break
+    if not pieces:
+        return np.zeros(0, np.uint8)
+    return np.concatenate(pieces)
+
+
+class ShortRangeRead(IOError):
+    """A shard's source delivered the wrong number of bytes for its range
+    (truncated file, misbehaving range callable).  Raised INSIDE the retry
+    scope, so a transient short read is rescanned and a persistent one
+    propagates — never a silent undercount."""
+
+
+def _exact_chunks(range_source, need: int, shard: int) -> Iterator[np.ndarray]:
+    got = 0
+    for c in _as_chunks(range_source):
+        got += len(c)
+        yield c
+    if got != need:
+        raise ShortRangeRead(
+            f"shard {shard}: range source delivered {got} bytes, "
+            f"expected {need}"
+        )
+
+
+class ShardedStreamScanner:
+    """Range-partitioned streaming matcher: S shards, one seam rule, exact.
+
+    ``n_shards`` defaults to the global device count (local devices x
+    processes).  Within a process, shards round-robin over ``devices``
+    (default: all local devices) with per-device plan replicas
+    (``engine.replicate_plans``) compiled once and reused by every shard on
+    that device; each shard's dispatches enqueue on its own device, so the
+    scans drain concurrently.  Across jax.distributed processes, each
+    process owns the shards ``i % process_count == process_index``.
+
+    Results are bit-identical to a single-host :class:`StreamScanner` for
+    every shard count — the acceptance property the CI ``multihost`` job
+    sweeps under 8 forced host devices.
+    """
+
+    def __init__(
+        self,
+        plans: Sequence[PatternPlan],
+        n_shards: Optional[int] = None,
+        chunk_bytes: int = DEFAULT_CHUNK_BYTES,
+        *,
+        k: Optional[int] = None,
+        devices=None,
+        max_retries: int = 1,
+    ):
+        self.plans = tuple(plans)
+        template = StreamScanner(self.plans, chunk_bytes, k=k)
+        self.overlap = template.overlap
+        self.max_m = template.max_m
+        self.n_patterns = template.n_patterns
+        self.order = template.order
+        self.chunk_bytes = chunk_bytes
+        self.k = k
+        if devices is None:
+            local = jax.local_devices()
+            devices = local if len(local) > 1 else [None]
+        self.devices = list(devices)
+        self.n_shards = int(n_shards) if n_shards else max(1, jax.device_count())
+        if self.n_shards < 1:
+            raise ValueError("n_shards must be >= 1")
+        self.max_retries = int(max_retries)
+        self.events: List[ShardRetry] = []
+        self.dispatch_count = 0
+        self._replicas: dict = {}
+
+    # -- shard plumbing -----------------------------------------------------
+
+    def shard_spec(self, total_bytes: int) -> StreamShardSpec:
+        return make_stream_shard_spec(
+            total_bytes, self.n_shards, overlap=self.overlap, align=EPSMC_BETA
+        )
+
+    def _plans_on(self, device):
+        if device is None:
+            return self.plans
+        got = self._replicas.get(device)
+        if got is None:
+            got = self._replicas[device] = engine.replicate_plans(
+                self.plans, device
+            )
+        return got
+
+    def _scanner(self, shard_i: int) -> StreamScanner:
+        device = self.devices[shard_i % len(self.devices)]
+        return StreamScanner(
+            self._plans_on(device), self.chunk_bytes, k=self.k, device=device
+        )
+
+    def _my_shards(self, n_shards: int) -> range:
+        return range(jax.process_index(), n_shards, jax.process_count())
+
+    def _scan_shard(self, source, spec: StreamShardSpec, i: int, consume):
+        """Run ``consume(scanner, range_source, prefix, start)`` for shard i
+        with re-open-and-rescan retry; returns consume's result."""
+        s, e = spec.ranges[i]
+
+        def attempt():
+            prefix = None
+            if s > 0:
+                ps, pe = spec.prefix_range(i)
+                prefix = read_range(source, ps, pe)
+                if len(prefix) != pe - ps:
+                    raise ShortRangeRead(
+                        f"shard {i}: overlap prefix delivered "
+                        f"{len(prefix)} bytes, expected {pe - ps}"
+                    )
+            sc = self._scanner(i)
+            rs = _exact_chunks(open_range(source, s, e), e - s, i)
+            out = consume(sc, rs, prefix, s)
+            return sc, out
+
+        def on_failure(attempt_i, exc):
+            self.events.append(
+                ShardRetry(shard=i, attempt=attempt_i, error=repr(exc))
+            )
+
+        sc, out = run_with_retries(
+            attempt, retries=self.max_retries, on_failure=on_failure
+        )
+        self.dispatch_count += sc.dispatch_count
+        return out
+
+    # -- queries ------------------------------------------------------------
+
+    def count_many(self, source, *, total_bytes: Optional[int] = None) -> np.ndarray:
+        """int32 (P_total,) exact occurrence counts over the whole logical
+        stream: per-shard device accumulators, one cross-device reduce, one
+        cross-process psum.  Nothing syncs until the merge, so every local
+        shard's chunks are in flight together."""
+        source = _normalize_source(source)
+        spec = self.shard_spec(source_total_bytes(source, total_bytes))
+        parts = [
+            self._scan_shard(
+                source, spec, i,
+                lambda sc, rs, pre, st: sc.count_device(rs, prefix=pre, start=st),
+            )
+            for i in self._my_shards(spec.n_shards)
+        ]
+        if parts:
+            local = compat.sum_across_devices(parts)
+        else:  # more processes than shards: contribute zeros to the psum
+            local = np.zeros((self.n_patterns,), np.int32)
+        return compat.process_allsum(local).astype(np.int32)
+
+    def any_many(self, source, *, total_bytes: Optional[int] = None) -> np.ndarray:
+        """bool (P_total,) — does each pattern occur anywhere in the stream?"""
+        return self.count_many(source, total_bytes=total_bytes) > 0
+
+    def positions_many(
+        self, source, *, total_bytes: Optional[int] = None
+    ) -> List[np.ndarray]:
+        """Per-pattern sorted global occurrence start positions.
+
+        Each shard's masks already carry global bases, so the merge is a
+        concat in shard order — start ranges are disjoint across shards (an
+        occurrence belongs to the shard holding its END byte, and ends are
+        partitioned), hence the result is sorted without a global sort.
+        Across processes, rows are exchanged via the ragged all-gather."""
+        source = _normalize_source(source)
+        spec = self.shard_spec(source_total_bytes(source, total_bytes))
+        rows: List[List[np.ndarray]] = [[] for _ in range(self.n_patterns)]
+
+        def consume(sc, rs, pre, st):
+            return sc.positions_many(rs, prefix=pre, start=st)
+
+        for i in self._my_shards(spec.n_shards):
+            got = self._scan_shard(source, spec, i, consume)
+            for p_i in range(self.n_patterns):
+                rows[p_i].append(got[p_i])
+        local = [
+            np.concatenate(r) if r else np.zeros(0, np.int64) for r in rows
+        ]
+        if jax.process_count() == 1:
+            return local
+        return [
+            np.sort(np.concatenate(compat.process_allgather_ragged(row)))
+            for row in local
+        ]
+
+
+def shard_stream_count(
+    source,
+    patterns: Sequence,
+    *,
+    n_shards: Optional[int] = None,
+    k: int = 0,
+    chunk_bytes: int = DEFAULT_CHUNK_BYTES,
+    total_bytes: Optional[int] = None,
+) -> np.ndarray:
+    """int32 (P,) exact (or <= k-mismatch) sharded counts in ORIGINAL
+    pattern order — the sharded sibling of :func:`stream.stream_count`."""
+    plans = engine.compile_patterns_cached(list(patterns), k=k)
+    sc = ShardedStreamScanner(plans, n_shards, chunk_bytes, k=k)
+    counts = sc.count_many(source, total_bytes=total_bytes)
+    out = np.zeros_like(counts)
+    out[sc.order] = counts
+    return out

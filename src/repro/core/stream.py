@@ -32,6 +32,19 @@ queries EXACTLY over arbitrarily long inputs in O(chunk) device memory:
 Approximate plans stream too: a <= k-mismatch occurrence spans the same m
 bytes as an exact one, so the overlap/attribution argument is untouched and
 ``count_many(..., k=k)`` (relaxed gate and all) simply runs per chunk.
+
+Two extensions ride on the same seam rule (DESIGN.md §10):
+
+  * a scanner can start MID-stream: ``count_many/masks(..., prefix=, start=)``
+    inject a carried overlap prefix and a global byte offset, so disjoint
+    ranges of one logical stream can be scanned by different scanners (or
+    hosts — core/shard_stream.py) and merged exactly, the shard boundary
+    being just a second-level window seam;
+
+  * sources may be gzip/zstd-compressed: wrap them in :class:`Compressed`
+    and frames decompress incrementally into the same O(chunk) window
+    (cold-storage corpora never materialize, and decompression overlaps
+    device compute exactly like the host->device copy does).
 """
 
 from __future__ import annotations
@@ -61,8 +74,103 @@ def _round_up(x: int, mult: int) -> int:
     return -(-x // mult) * mult
 
 
+class Compressed:
+    """Marks a byte source as gzip/zstd frames to decompress on the fly.
+
+    ``source`` may be compressed bytes, a binary file-like, or an iterator
+    of frames (e.g. one gzip member / zstd frame per cold-storage object) —
+    concatenated frames are legal in both formats and decode as one logical
+    stream.  ``codec`` is "gzip", "zstd", or "auto" (sniff the first frame's
+    magic).  zstd needs the `zstandard` package; its absence raises only
+    when a zstd source is actually opened."""
+
+    def __init__(self, source, codec: str = "auto"):
+        if codec not in ("auto", "gzip", "zstd"):
+            raise ValueError(f"unknown codec {codec!r}")
+        self.source = source
+        self.codec = codec
+
+
+def _raw_pieces(source) -> Iterator[bytes]:
+    """COMPRESSED byte pieces of a Compressed source's underlying stream."""
+    if isinstance(source, (bytes, bytearray, memoryview)):
+        yield bytes(source)
+        return
+    if hasattr(source, "read"):
+        while True:
+            b = source.read(_READ_BYTES)
+            if not b:
+                return
+            yield bytes(b)
+        return
+    for piece in source:
+        if isinstance(piece, np.ndarray):
+            piece = piece.tobytes()
+        yield bytes(piece)
+
+
+_GZIP_MAGIC = b"\x1f\x8b"
+_ZSTD_MAGIC = b"\x28\xb5\x2f\xfd"
+
+
+def _chain_head(head: bytes, rest) -> Iterator[bytes]:
+    if head:
+        yield head
+    yield from rest
+
+
+def _new_decompressor(codec: str):
+    if codec == "gzip":
+        import zlib
+
+        return zlib.decompressobj(wbits=16 + zlib.MAX_WBITS)
+    try:
+        import zstandard
+    except ImportError as e:  # gated dep: only zstd sources need it
+        raise RuntimeError(
+            "zstd-compressed sources need the `zstandard` package "
+            "(pip install zstandard), which is not installed"
+        ) from e
+    return zstandard.ZstdDecompressor().decompressobj()
+
+
+def _decompressed_chunks(c: Compressed) -> Iterator[np.ndarray]:
+    """Incremental multi-frame decompression: O(compressed piece + emitted
+    chunk) host memory, frames restarted via each decompressor's
+    eof/unused_data contract (zlib and zstandard expose the same one)."""
+    codec = c.codec
+    d = None
+    pieces = _raw_pieces(c.source)
+    head = b""
+    if codec == "auto":
+        # a read()/iterator may legally deliver < 4 bytes: buffer until the
+        # longest magic is decidable before sniffing
+        for piece in pieces:
+            head += piece
+            if len(head) >= len(_ZSTD_MAGIC):
+                break
+        codec = "zstd" if head[: len(_ZSTD_MAGIC)] == _ZSTD_MAGIC else "gzip"
+    for data in _chain_head(head, pieces):
+        while data:
+            if d is None:
+                d = _new_decompressor(codec)
+            out = d.decompress(data)
+            if out:
+                yield np.frombuffer(out, np.uint8)
+            if d.eof:  # frame boundary: restart on the leftover bytes
+                data = d.unused_data
+                d = None
+            else:
+                data = b""
+    if d is not None and not d.eof:
+        raise ValueError(f"truncated {codec} stream")
+
+
 def _as_chunks(source) -> Iterator[np.ndarray]:
     """Normalize any byte source into an iterator of host uint8 arrays."""
+    if isinstance(source, Compressed):
+        yield from _decompressed_chunks(source)
+        return
     if isinstance(source, str):
         source = source.encode("utf-8", errors="surrogateescape")
     if isinstance(source, (bytes, bytearray, memoryview)):
@@ -148,6 +256,20 @@ class StreamScanner:
     ``k`` overrides the per-plan mismatch budget exactly like
     ``engine.count_many(..., k=)``; None runs each plan at the budget it was
     compiled for.
+
+    ``device`` pins every dispatch (windows, accumulator, plan state) to one
+    local device; the sharded scanner (core/shard_stream.py) uses this to
+    fan shards out over the fleet's devices, whose async dispatch queues
+    then drain concurrently.  None keeps jax's default placement.
+
+    ``count_many``/``masks``/``positions_many`` accept ``prefix``/``start``
+    to scan a mid-stream RANGE of a larger logical stream: ``start`` is the
+    global byte offset of the source's first byte and ``prefix`` the up-to-
+    ``overlap`` bytes immediately before it (its occurrences-ending-inside
+    belong to whoever scanned the preceding range — the shard seam is just
+    a second-level window seam, DESIGN.md §10).  ``start - len(prefix)``
+    must sit on a beta block boundary so chunk-local aligned block
+    fingerprints still coincide with the global ones.
     """
 
     def __init__(
@@ -156,10 +278,14 @@ class StreamScanner:
         chunk_bytes: int = DEFAULT_CHUNK_BYTES,
         *,
         k: Optional[int] = None,
+        device=None,
     ):
         self.plans = tuple(plans)
         if not self.plans:
             raise ValueError("StreamScanner needs at least one PatternPlan")
+        self.device = device
+        if device is not None:
+            self.plans = engine.replicate_plans(self.plans, device)
         self.k = k
         self.max_m = max(p.m for p in self.plans)
         # overlap >= max_m - 1 carries every possibly-straddling occurrence
@@ -176,15 +302,42 @@ class StreamScanner:
 
     # -- host-side re-chunking ---------------------------------------------
 
-    def _windows(self, source) -> Iterator[Tuple[np.ndarray, int, int, int]]:
+    def _injection(self, prefix, start: int) -> Tuple[np.ndarray, int]:
+        """Validate a mid-stream (prefix, start) injection; returns the
+        normalized carry array and the global position of the first window."""
+        if prefix is None:
+            carry = np.zeros(0, np.uint8)
+        else:
+            carry = np.ascontiguousarray(
+                np.asarray(jax.device_get(prefix)).reshape(-1), np.uint8
+            )
+        if len(carry) > self.overlap:
+            raise ValueError(
+                f"injected prefix ({len(carry)} B) exceeds the scanner "
+                f"overlap ({self.overlap} B)"
+            )
+        base = int(start) - len(carry)
+        if base % EPSMC_BETA:
+            raise ValueError(
+                "start - len(prefix) must be a multiple of EPSMC_BETA "
+                f"({EPSMC_BETA}) to preserve the global block phase; got "
+                f"start={start}, len(prefix)={len(carry)}"
+            )
+        return carry, base
+
+    def _windows(
+        self, source, *, prefix=None, start: int = 0
+    ) -> Iterator[Tuple[np.ndarray, int, int, int]]:
         """Yield (window (N,) uint8, valid_len, carry_len, base): fixed-
         capacity host windows where window[:carry_len] re-feeds the previous
-        window's tail and ``base`` is the global position of window[0]."""
+        window's tail and ``base`` is the global position of window[0].
+        ``prefix``/``start`` seed the first window's carry for mid-stream
+        ranges (the first chunk's seam subtraction then removes occurrences
+        the preceding range already owned)."""
         N, ov = self.window_bytes, self.overlap
         pieces: deque = deque()
         have = 0
-        carry = np.zeros(0, np.uint8)
-        base = 0
+        carry, base = self._injection(prefix, start)
         exhausted = False
         it = _as_chunks(source)
         while True:
@@ -227,22 +380,38 @@ class StreamScanner:
             ov=self.overlap, k=self.k,
         )
 
-    def count_many(self, source) -> np.ndarray:
-        """int32 (P_total,) exact occurrence counts over the whole stream.
+    def _zero_counts(self):
+        z = jnp.zeros((self.n_patterns,), jnp.int32)
+        return z if self.device is None else jax.device_put(z, self.device)
+
+    def count_device(self, source, *, prefix=None, start: int = 0):
+        """Device-resident (P_total,) int32 count accumulator, NOT synced —
+        the sharded scanner enqueues every shard's chunks this way and pays
+        one collective merge instead of a per-shard host round-trip.
 
         Double-buffered: the (i+1)-th window's host->device transfer is
         issued before the i-th window's (asynchronously dispatched) compute
-        is consumed, and nothing syncs until the final accumulator read."""
-        counts = jnp.zeros((self.n_patterns,), jnp.int32)
+        is consumed, and nothing here waits on device results at all."""
+        counts = self._zero_counts()
         pending = None
-        for win, L, carry_len, _base in self._windows(source):
-            dev = jax.device_put(win)
+        for win, L, carry_len, _base in self._windows(
+            source, prefix=prefix, start=start
+        ):
+            dev = jax.device_put(win, self.device)
             if pending is not None:
                 counts = self._dispatch_count(counts, *pending)
             pending = (dev, np.int32(L), np.int32(carry_len))
         if pending is not None:
             counts = self._dispatch_count(counts, *pending)
-        return np.asarray(jax.device_get(counts))
+        return counts
+
+    def count_many(self, source, *, prefix=None, start: int = 0) -> np.ndarray:
+        """int32 (P_total,) exact occurrence counts over the whole stream
+        (or, with ``prefix``/``start``, over one mid-stream range — counting
+        exactly the occurrences whose END lies inside it)."""
+        return np.asarray(
+            jax.device_get(self.count_device(source, prefix=prefix, start=start))
+        )
 
     def any_many(self, source) -> np.ndarray:
         """bool (P_total,) — does each pattern occur anywhere in the stream?"""
@@ -252,11 +421,11 @@ class StreamScanner:
         """Scalar verdict with early exit: the accumulator is polled every
         ``sync_every`` chunks so a hit near the head of a long stream stops
         the scan without draining the source."""
-        counts = jnp.zeros((self.n_patterns,), jnp.int32)
+        counts = self._zero_counts()
         pending = None
         chunks = 0
         for win, L, carry_len, _base in self._windows(source):
-            dev = jax.device_put(win)
+            dev = jax.device_put(win, self.device)
             if pending is not None:
                 counts = self._dispatch_count(counts, *pending)
                 chunks += 1
@@ -267,15 +436,21 @@ class StreamScanner:
             counts = self._dispatch_count(counts, *pending)
         return bool(np.asarray(jax.device_get(counts)).sum() > 0)
 
-    def masks(self, source) -> Iterator[Tuple[int, int, np.ndarray]]:
+    def masks(
+        self, source, *, prefix=None, start: int = 0
+    ) -> Iterator[Tuple[int, int, np.ndarray]]:
         """Yield (base, new_start, (P_total, L) bool) per chunk: the seam-
         deduped match-start mask of the chunk's valid bytes.  A start at
         column j is global position base + j; every occurrence appears in
         exactly one yielded mask.  ``new_start`` is the carried-prefix
-        length (starts before new_start - max_m + 1 are always False)."""
+        length (starts before new_start - max_m + 1 are always False).
+        With ``prefix``/``start``, bases are global stream positions and
+        occurrences ending before ``start`` are dropped (previous range's)."""
         pending = None
-        for win, L, carry_len, base in self._windows(source):
-            dev = jax.device_put(win)
+        for win, L, carry_len, base in self._windows(
+            source, prefix=prefix, start=start
+        ):
+            dev = jax.device_put(win, self.device)
             if pending is not None:
                 yield self._flush_mask(*pending)
             pending = (dev, np.int32(L), np.int32(carry_len), base, L)
@@ -287,11 +462,13 @@ class StreamScanner:
         mask = _mask_step(dev, length, prev_ov, self.plans, k=self.k)
         return base, int(prev_ov), np.asarray(jax.device_get(mask))[:, :L]
 
-    def positions_many(self, source) -> List[np.ndarray]:
+    def positions_many(
+        self, source, *, prefix=None, start: int = 0
+    ) -> List[np.ndarray]:
         """Per-pattern sorted global occurrence start positions (host side;
         output-sized host memory, still O(chunk) device memory)."""
         out: List[List[np.ndarray]] = [[] for _ in range(self.n_patterns)]
-        for base, _new_start, mask in self.masks(source):
+        for base, _new_start, mask in self.masks(source, prefix=prefix, start=start):
             for p_i in range(self.n_patterns):
                 (loc,) = np.nonzero(mask[p_i])
                 if len(loc):

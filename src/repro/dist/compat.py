@@ -1,12 +1,19 @@
-"""Version shims for jax APIs that moved between releases.
+"""Version shims for jax APIs that moved between releases, and the small
+collective helpers the sharded-stream merge rides on.
 
 `jax.shard_map` (with its `check_vma` flag) only exists on newer jax; on the
 0.4.x line the implementation lives in `jax.experimental.shard_map` and the
-replication check is spelled `check_rep`.  Everything in this repo goes
-through this wrapper so the call sites stay written against the new API.
+replication check is spelled `check_rep`.  `jax.make_mesh` only exists from
+0.4.35.  Everything in this repo goes through these wrappers so the call
+sites stay written against the new API — and the CI jax-version matrix
+(oldest supported pin / latest) exercises both branches of every shim.
 """
 
 from __future__ import annotations
+
+from typing import List, Sequence
+
+import numpy as np
 
 import jax
 
@@ -50,3 +57,107 @@ def cost_analysis_dict(compiled) -> dict:
     if isinstance(ca, (list, tuple)):
         ca = ca[0] if ca else {}
     return ca or {}
+
+
+def make_mesh(shape: Sequence[int], axis_names, *, devices=None):
+    """`jax.make_mesh` (0.4.35+) with a manual-Mesh fallback for older jax,
+    plus an explicit `devices` override the shard-stream entrypoint uses to
+    build a mesh over a device SUBSET (jax.make_mesh always takes all)."""
+    shape = tuple(int(s) for s in shape)
+    if devices is None and hasattr(jax, "make_mesh"):
+        return jax.make_mesh(shape, tuple(axis_names))
+    from jax.sharding import Mesh
+
+    devs = list(jax.devices() if devices is None else devices)
+    n = int(np.prod(shape))
+    if len(devs) < n:
+        raise ValueError(f"mesh {shape} needs {n} devices, have {len(devs)}")
+    arr = np.empty(n, dtype=object)
+    for i, d in enumerate(devs[:n]):
+        arr[i] = d
+    return Mesh(arr.reshape(shape), tuple(axis_names))
+
+
+def _device_of(x):
+    """The single device a committed jax.Array lives on (API moved: .devices()
+    set on newer jax, .device() method on the early 0.4 line)."""
+    devs = getattr(x, "devices", None)
+    if callable(devs):
+        got = devs()
+        return next(iter(got)) if not hasattr(got, "device_kind") else got
+    return x.device()  # pragma: no cover - ancient jax
+
+
+@jax.jit
+def _sum_shard_axis(a):
+    return a.sum(0)
+
+
+def sum_across_devices(parts: Sequence[jax.Array]) -> np.ndarray:
+    """psum-style merge of per-shard accumulators (same shape/dtype each).
+
+    Parts sharing one device fold with on-device adds; parts spread over D
+    devices are assembled — WITHOUT gathering to host first — into one
+    device-sharded (D, ...) global array and reduced by a single jitted sum,
+    which XLA lowers to an actual cross-device reduction.  This is the
+    count-merge collective of the two-level seam rule (DESIGN.md §10)."""
+    if not parts:
+        raise ValueError("sum_across_devices needs at least one part")
+    per_dev: dict = {}
+    for p in parts:
+        d = _device_of(p)
+        acc = per_dev.get(d)
+        per_dev[d] = p if acc is None else acc + p
+    vals: List[jax.Array] = list(per_dev.values())
+    if len(vals) == 1:
+        return np.asarray(jax.device_get(vals[0]))
+    from jax.sharding import NamedSharding
+    from jax.sharding import PartitionSpec as P
+
+    mesh = make_mesh((len(vals),), ("shard",), devices=list(per_dev))
+    shape = (len(vals),) + tuple(vals[0].shape)
+    stacked = jax.make_array_from_single_device_arrays(
+        shape, NamedSharding(mesh, P("shard")), [v[None] for v in vals]
+    )
+    return np.asarray(jax.device_get(_sum_shard_axis(stacked)))
+
+
+def process_allsum(x: np.ndarray) -> np.ndarray:
+    """Sum a host array across jax.distributed processes (identity for a
+    single process, so the sharded scanner needs no mode switch)."""
+    if jax.process_count() == 1:
+        return np.asarray(x)
+    from jax.experimental import multihost_utils
+
+    return np.asarray(multihost_utils.process_allgather(np.asarray(x))).sum(0)
+
+
+def process_allgather_ragged(x: np.ndarray) -> List[np.ndarray]:
+    """All-gather a ragged 1-D int64 array across processes; returns one
+    array per process (just [x] single-process).
+
+    int64 payloads (global stream positions) are split into two int32 planes
+    for the wire — multihost_utils runs under the default x64-disabled config,
+    which would silently truncate a direct int64 gather."""
+    x = np.asarray(x, np.int64)
+    if jax.process_count() == 1:
+        return [x]
+    from jax.experimental import multihost_utils
+
+    lens = np.asarray(
+        multihost_utils.process_allgather(np.asarray([len(x)], np.int32))
+    ).reshape(-1)
+    cap = max(int(lens.max()), 1)
+    lo = np.zeros(cap, np.int32)
+    hi = np.zeros(cap, np.int32)
+    lo[: len(x)] = (x & 0x7FFFFFFF).astype(np.int32)
+    hi[: len(x)] = (x >> 31).astype(np.int32)
+    lo_all = np.asarray(multihost_utils.process_allgather(lo))
+    hi_all = np.asarray(multihost_utils.process_allgather(hi))
+    out = []
+    for i in range(len(lens)):
+        n = int(lens[i])
+        out.append(
+            (hi_all[i, :n].astype(np.int64) << 31) | lo_all[i, :n].astype(np.int64)
+        )
+    return out

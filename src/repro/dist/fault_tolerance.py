@@ -1,4 +1,5 @@
-"""Fault tolerance for long training runs: injected faults (restart tests),
+"""Fault tolerance for long training runs and sharded scans: injected faults
+(restart tests), shard-retry bookkeeping for the sharded streaming scanner,
 a per-step straggler watchdog, and the abort signal it raises.
 
 The watchdog keeps a rolling window of recent step durations and flags a step
@@ -35,6 +36,32 @@ class StragglerEvent:
     duration_s: float
     median_s: float
     factor: float
+
+
+@dataclasses.dataclass
+class ShardRetry:
+    """One failed attempt at scanning a stream shard (DESIGN.md §10): the
+    shard was re-opened from its byte range and rescanned from scratch —
+    a partial scan's already-dispatched chunks are simply discarded, so a
+    retried shard's contribution is identical to a clean first pass."""
+
+    shard: int
+    attempt: int
+    error: str
+
+
+def run_with_retries(fn, *, retries: int, on_failure=None):
+    """Call ``fn()``; on exception retry up to ``retries`` more times, then
+    re-raise.  ``on_failure(attempt, exc)`` observes every failed attempt
+    (the sharded scanner logs a :class:`ShardRetry` there)."""
+    for attempt in range(retries + 1):
+        try:
+            return fn()
+        except Exception as exc:  # noqa: BLE001 - a shard may die any way it likes
+            if on_failure is not None:
+                on_failure(attempt, exc)
+            if attempt == retries:
+                raise
 
 
 class StepWatchdog:

@@ -20,6 +20,7 @@ Conventions:
 
 from __future__ import annotations
 
+import dataclasses
 from typing import Any, Optional, Sequence, Tuple, Union
 
 import jax
@@ -71,6 +72,69 @@ def tree_to_shardings(mesh, spec_tree):
     return jax.tree_util.tree_map(
         lambda s: NamedSharding(mesh, s), spec_tree,
         is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Byte-range partitioning (sharded streaming scans, DESIGN.md §10)
+# ---------------------------------------------------------------------------
+
+def range_partition(
+    total: int, n_shards: int, *, align: int = 1
+) -> Tuple[Tuple[int, int], ...]:
+    """n_shards contiguous (start, stop) byte ranges covering [0, total).
+
+    Interior boundaries are rounded DOWN to `align` (the stream seam rule
+    needs every shard start on a beta block boundary so chunk-local aligned
+    block fingerprints coincide with the global ones); the last shard absorbs
+    the un-aligned remainder.  Degenerate shards (start == stop) are legal —
+    they own no end positions and scan nothing."""
+    total, n_shards, align = int(total), int(n_shards), int(align)
+    if total < 0 or n_shards < 1 or align < 1:
+        raise ValueError("range_partition needs total >= 0, n_shards/align >= 1")
+    bounds = [
+        min(total, (total * i) // n_shards // align * align)
+        for i in range(n_shards + 1)
+    ]
+    bounds[0], bounds[-1] = 0, total
+    return tuple((bounds[i], bounds[i + 1]) for i in range(n_shards))
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamShardSpec:
+    """Range-partition plan for one logical stream scanned by many hosts.
+
+    Shard i scans ``ranges[i]`` with ``overlap`` bytes of carried prefix
+    (the bytes immediately before its start) injected into its first window;
+    end-position attribution makes it own exactly the occurrences whose last
+    byte falls inside its range."""
+
+    total_bytes: int
+    ranges: Tuple[Tuple[int, int], ...]
+    overlap: int  # carried prefix bytes at each interior boundary
+    align: int    # boundary alignment (the EPSMc beta block)
+
+    @property
+    def n_shards(self) -> int:
+        return len(self.ranges)
+
+    def prefix_range(self, i: int) -> Tuple[int, int]:
+        """Byte range of shard i's injected overlap prefix (empty for i=0 or
+        a shard starting at 0)."""
+        s = self.ranges[i][0]
+        return (max(0, s - self.overlap), s)
+
+
+def make_stream_shard_spec(
+    total: int, n_shards: int, *, overlap: int, align: int
+) -> StreamShardSpec:
+    if overlap < 0 or overlap % align:
+        raise ValueError("overlap must be a non-negative multiple of align")
+    return StreamShardSpec(
+        total_bytes=int(total),
+        ranges=range_partition(total, n_shards, align=align),
+        overlap=int(overlap),
+        align=int(align),
     )
 
 

@@ -1,0 +1,64 @@
+"""Benchmark-drift gate (benchmarks/render_tables.py): the committed JSONs
+satisfy their schemas, the renderer is deterministic, and schema violations
+actually fail — so CI's benchgate job can be trusted to catch drift."""
+
+import json
+import sys
+from pathlib import Path
+
+import pytest
+
+REPO = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(REPO))
+
+from benchmarks import render_tables as rt  # noqa: E402
+
+OUTDIR = REPO / "experiments" / "benchmarks"
+
+
+def test_committed_jsons_validate_and_render():
+    text = rt.render(OUTDIR)  # raises SchemaError on any violation
+    assert text == rt.render(OUTDIR)  # deterministic
+    for f in OUTDIR.glob("BENCH_*.json"):
+        if f.name != rt.PAPER_JSON:
+            assert f.name in text  # every artifact is surfaced in the md
+
+
+def test_committed_markdown_is_fresh():
+    md = OUTDIR / rt.MD_NAME
+    assert md.exists(), "paper_tables.md missing"
+    assert md.read_text() == rt.render(OUTDIR), (
+        "experiments/benchmarks/paper_tables.md is stale — run "
+        "`python benchmarks/render_tables.py`"
+    )
+
+
+def test_schema_violations_raise(tmp_path):
+    rows = json.loads((OUTDIR / "BENCH_multipattern.json").read_text())
+    good = dict(rows[0])
+    for corruption in (
+        {"us_per_call": None},
+        {"GBps": float("nan")},
+        {"size_bytes": 0},
+        {"name": 7},
+    ):
+        with pytest.raises(rt.SchemaError):
+            rt.validate_rows("BENCH_multipattern.json", [dict(good, **corruption)])
+    with pytest.raises(rt.SchemaError):
+        rt.validate_rows("BENCH_multipattern.json", [])
+    bad = dict(good)
+    del bad["speedup_vs_vmap"]  # file-specific required field
+    with pytest.raises(rt.SchemaError):
+        rt.validate_rows("BENCH_multipattern.json", [bad])
+    with pytest.raises(rt.SchemaError):
+        rt.validate_paper(rt.PAPER_JSON, {"tables": {}})
+
+
+def test_check_mode_detects_drift(tmp_path):
+    for f in OUTDIR.glob("BENCH_*.json"):
+        (tmp_path / f.name).write_text(f.read_text())
+    assert rt.main(["--dir", str(tmp_path)]) == 0  # writes fresh md
+    assert rt.main(["--dir", str(tmp_path), "--check"]) == 0
+    md = tmp_path / rt.MD_NAME
+    md.write_text(md.read_text() + "drift\n")
+    assert rt.main(["--dir", str(tmp_path), "--check"]) == 2

@@ -9,6 +9,7 @@ import jax.numpy as jnp
 
 from repro.analysis.hlo_collectives import collective_stats
 from repro.analysis.jaxpr_cost import step_cost
+from repro.dist.compat import make_mesh
 from repro.analysis.roofline import collective_bytes, roofline_terms
 
 
@@ -64,7 +65,7 @@ def test_collective_parser_multiplies_while_trips():
     """Collectives inside a scanned body must be scaled by trip count."""
     from jax.sharding import NamedSharding, PartitionSpec as P
 
-    mesh = jax.make_mesh((1,), ("data",))
+    mesh = make_mesh((1,), ("data",))
     L = 8
 
     def f(x, w):
@@ -110,7 +111,8 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import jax, jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.analysis.hlo_collectives import collective_stats
-mesh = jax.make_mesh((8,), ("data",))
+from repro.dist.compat import make_mesh
+mesh = make_mesh((8,), ("data",))
 L = 8
 
 def f(x, w):

@@ -1,17 +1,21 @@
 """Streaming scan engine (core/stream.py): seam-equivalence against the
 resident engine, the one-dispatch-per-chunk and bounded-device-memory
-contracts, and the streaming consumers (epsm stream= hatch, blocklist
-pipeline oversize documents, plan-cache hot key, lazy stop-scanner sync)."""
+contracts, compressed (gzip/zstd) sources, the mid-stream prefix/start
+injection the sharded scanner builds on, and the streaming consumers (epsm
+stream= hatch, blocklist pipeline oversize documents, plan-cache hot key,
+lazy stop-scanner sync)."""
 
+import gzip
 import io
 
 import numpy as np
+import pytest
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import engine, epsm
-from repro.core.stream import StreamScanner, find_stream, stream_count
+from repro.core.stream import Compressed, StreamScanner, find_stream, stream_count
 
 from conftest import make_text
 
@@ -122,6 +126,100 @@ def test_empty_and_short_sources(rng):
     short = np.arange(8, dtype=np.uint8)
     assert StreamScanner(plans, 256).count_many(short).tolist() == [1]
     assert StreamScanner(plans, 256).count_many(short[:5]).tolist() == [0]
+
+
+def test_gzip_sources_stream_exactly(rng):
+    """Compressed sources decompress incrementally into the O(chunk) window:
+    bytes, file-like, and an iterator of frames, single- and multi-member,
+    all agree with the plain scan — including occurrences planted ACROSS
+    gzip member boundaries (the decompressed-chunk seams land mid-window,
+    so the overlap carry is exercised by the frame layout itself)."""
+    text = make_text(rng, 30_000, 4)
+    m = 8
+    pat = np.full(m, 9, np.uint8)
+    cuts = [5_000, 12_344, 20_008]  # member boundaries
+    for cut in cuts:
+        text[cut - m // 2 : cut - m // 2 + m] = pat  # straddles the boundary
+    plans = engine.compile_patterns([pat, text[100:108].copy()])
+    want = StreamScanner(plans, 1024).count_many(text)
+    assert want[0] >= len(cuts)  # the straddling plants are really there
+    members = np.split(text, cuts)
+    blob_one = gzip.compress(text.tobytes())
+    blob_multi = b"".join(gzip.compress(c.tobytes()) for c in members)
+    frames = [gzip.compress(c.tobytes()) for c in members]
+    for src in (
+        Compressed(blob_one),
+        Compressed(blob_multi),
+        Compressed(io.BytesIO(blob_multi)),
+        Compressed(iter(frames), codec="gzip"),
+    ):
+        got = StreamScanner(plans, 1024).count_many(src)
+        np.testing.assert_array_equal(got, want)
+    # positions agree too (mask path shares the decompression)
+    pos = StreamScanner(plans, 1024).positions_many(Compressed(blob_multi))
+    want_pos = StreamScanner(plans, 1024).positions_many(text)
+    for r in range(len(pos)):
+        np.testing.assert_array_equal(pos[r], want_pos[r])
+    # truncated stream is an error, not a silent short count
+    with pytest.raises(ValueError):
+        StreamScanner(plans, 1024).count_many(Compressed(blob_one[:-20]))
+    # auto-sniff survives a first read() piece shorter than the magic
+    tiny_pieces = [blob_one[:2], blob_one[2:3], blob_one[3:]]
+    got = StreamScanner(plans, 1024).count_many(Compressed(iter(tiny_pieces)))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_zstd_sources_stream_exactly(rng):
+    zstandard = pytest.importorskip("zstandard")
+    text = make_text(rng, 20_000, 4)
+    plans = engine.compile_patterns([text[100:108].copy()])
+    want = StreamScanner(plans, 1024).count_many(text)
+    cctx = zstandard.ZstdCompressor()
+    blob = b"".join(
+        cctx.compress(c.tobytes()) for c in np.array_split(text, 4)
+    )
+    got = StreamScanner(plans, 1024).count_many(Compressed(blob))
+    np.testing.assert_array_equal(got, want)
+    got_auto = StreamScanner(plans, 1024).count_many(
+        Compressed(io.BytesIO(blob), codec="auto")
+    )
+    np.testing.assert_array_equal(got_auto, want)
+
+
+def test_mid_stream_prefix_start_injection(rng):
+    """The factored chunk loop: scanning [0, p) and [p, n) as separate
+    ranges (the second with the carried prefix and start offset) composes to
+    the whole-text result — counts add, positions are global and disjoint.
+    This is the per-shard contract shard_stream.py relies on."""
+    text = make_text(rng, 9_000, 4)
+    pats = [text[70:78].copy(), text[10:42].copy()]
+    plans = engine.compile_patterns(pats)
+    sc = StreamScanner(plans, 1024)
+    ov = sc.overlap
+    whole = sc.count_many(text)
+    whole_pos = StreamScanner(plans, 1024).positions_many(text)
+    for p in (1024, 2048, 4096):  # beta-aligned split points
+        left = StreamScanner(plans, 1024).count_many(text[:p])
+        right = StreamScanner(plans, 1024).count_many(
+            text[p:], prefix=text[p - ov : p], start=p
+        )
+        np.testing.assert_array_equal(left + right, whole, err_msg=f"p={p}")
+        pos_l = StreamScanner(plans, 1024).positions_many(text[:p])
+        pos_r = StreamScanner(plans, 1024).positions_many(
+            text[p:], prefix=text[p - ov : p], start=p
+        )
+        for r in range(len(pos_l)):
+            np.testing.assert_array_equal(
+                np.concatenate([pos_l[r], pos_r[r]]), whole_pos[r],
+                err_msg=f"p={p} row {r}",
+            )
+    # contract violations are loud
+    with pytest.raises(ValueError):  # start - len(prefix) off the beta grid
+        StreamScanner(plans, 1024).count_many(text[5:], prefix=text[1:5], start=5)
+    with pytest.raises(ValueError):  # prefix longer than the overlap
+        StreamScanner(plans, 1024).count_many(
+            text[ov + 8 :], prefix=text[: ov + 8], start=ov + 8
+        )
 
 
 def test_stream_count_original_order_and_find_stream(rng):
