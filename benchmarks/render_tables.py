@@ -38,6 +38,8 @@ FILE_EXTRAS = {
     "BENCH_stream.json": {},   # two row families; shared keys only
     "BENCH_shard.json": {"shards": int, "speedup_vs_1shard": (int, float),
                          "devices": int},
+    "BENCH_megascan.json": {"groups": int, "k": int,
+                            "speedup_vs_pergroup": (int, float)},
 }
 # BENCH_paper_tables.json is a dict, not a row list: validated separately.
 PAPER_JSON = "BENCH_paper_tables.json"
@@ -55,6 +57,18 @@ def _check_type(fname, where, key, val, types):
         )
     if isinstance(val, float) and not math.isfinite(val):
         raise SchemaError(f"{fname}: {where}: field {key!r} is not finite")
+
+
+def split_meta(fname: str, doc):
+    """BENCH_*.json is either a bare row list or {"meta": {...}, "rows":
+    [...]} — the meta object records measurement caveats (host core count,
+    baseline identity) that are not per-row numbers."""
+    if isinstance(doc, dict) and "rows" in doc:
+        meta = doc.get("meta", {})
+        if not isinstance(meta, dict):
+            raise SchemaError(f"{fname}: 'meta' must be an object")
+        return doc["rows"], meta
+    return doc, {}
 
 
 def validate_rows(fname: str, rows) -> None:
@@ -125,13 +139,17 @@ def _derived_cols(fname: str):
     return [k for k in FILE_EXTRAS.get(fname, {}) if k not in ("P", "B", "m")]
 
 
-def format_rows_table(fname: str, rows) -> str:
+def format_rows_table(fname: str, rows, meta=None) -> str:
     extras = _derived_cols(fname)
     # BENCH_stream rows carry family-specific ratio fields: surface whichever
     # each row has, in one "derived" column, so both families render.
-    lines = [
-        f"### {fname}",
-        "",
+    lines = [f"### {fname}", ""]
+    if meta:
+        lines += [
+            "meta: " + "; ".join(f"{k}={meta[k]}" for k in sorted(meta)),
+            "",
+        ]
+    lines += [
         "| name | µs/call | GB/s | MB | " + " | ".join(extras + ["derived"]) + " |",
         "|---|" + "---|" * (4 + len(extras)),
     ]
@@ -177,9 +195,9 @@ def render(outdir: Path) -> str:
     for f in sorted(outdir.glob("BENCH_*.json")):
         if f.name == PAPER_JSON:
             continue
-        rows = json.loads(f.read_text())
+        rows, meta = split_meta(f.name, json.loads(f.read_text()))
         validate_rows(f.name, rows)
-        parts += ["", format_rows_table(f.name, rows)]
+        parts += ["", format_rows_table(f.name, rows, meta)]
     return "\n".join(parts) + "\n"
 
 

@@ -322,12 +322,112 @@ def bench_stream(outdir: Path):
     (outdir / "BENCH_stream.json").write_text(json.dumps(rows, indent=1))
 
 
+def bench_megascan(outdir: Path):
+    """Fused one-dispatch streaming vs the per-group baseline — the
+    megakernel PR's acceptance artifact (BENCH_megascan.json).
+
+    The fused path is one StreamScanner per plan set: ONE dispatch per chunk
+    answers every length group (shared fingerprint bank + shared candidate
+    compaction) with the seam correction folded in (count_many end_min).
+    The baseline is the pre-fusion shape: one StreamScanner per length
+    group with fused=False, shared=False — each group re-scans the stream
+    through its own per-group matcher (count_many shared=False, the
+    _COUNT dispatch that remains the engine's fallback path), paying its own
+    fingerprint pass, candidate compaction, and two-pass overlap-prefix seam
+    subtraction over the same bytes.  Pallas
+    interpret-mode wall-time is not meaningful on CPU (see bench_kernels),
+    so the timed fused path is the pure-JAX engine the kernel is pinned
+    bit-identical to by tests/test_megascan.py — the established executable
+    proxy.  Grid: {16, 64, 256} MB x {1, 3, 5} length groups x k in {0, 1},
+    4 patterns per group; counts are cross-checked before timing."""
+    import json
+    import os
+
+    from repro.core import engine as eng
+    from repro.core.stream import StreamScanner
+    from repro.data import corpus
+    from repro.kernels.megascan import build_mega_spec
+
+    GROUP_MS = {1: (8,), 3: (8, 12, 15), 5: (2, 5, 12, 16, 24)}
+    npat = 4
+    chunk = 1 << 22
+    rows = []
+    for mb in (16, 64, 256):
+        size = mb * 1_000_000
+        text = corpus.make_corpus("genome", size, seed=0)
+        for g, ms in GROUP_MS.items():
+            pats = []
+            for m in ms:
+                pats += [
+                    text[i * 997 + m : i * 997 + 2 * m].copy()
+                    for i in range(npat)
+                ]
+            for k in (0, 1):
+                plans = eng.compile_patterns(pats, k=k)
+                assert build_mega_spec(plans, k=k) is not None, (
+                    f"plan set unexpectedly kernel-ineligible g={g} k={k}"
+                )
+                fused_sc = StreamScanner(plans, chunk, k=k)
+                per_scs = [
+                    StreamScanner((p,), chunk, k=k, fused=False, shared=False)
+                    for p in plans
+                ]
+                warm = text[: 2 * fused_sc.window_bytes]
+                fused_sc.count_many(warm)
+                for s in per_scs:
+                    s.count_many(warm)
+                got = fused_sc.count_many(text)
+                want = np.concatenate(
+                    [s.count_many(text) for s in per_scs]
+                )
+                assert np.array_equal(got, want), (
+                    f"fused/per-group divergence mb={mb} g={g} k={k}"
+                )
+                dt_f = timeit_median(
+                    lambda s=fused_sc: s.count_many(text), reps=3
+                )
+                dt_p = sum(
+                    timeit_median(lambda s=s: s.count_many(text), reps=3)
+                    for s in per_scs
+                )
+                for name, dt, speedup in (
+                    (f"megascan/pergroup_baseline/{mb}mb/g{g}/k{k}", dt_p, 1.0),
+                    (f"megascan/fused/{mb}mb/g{g}/k{k}", dt_f, dt_p / dt_f),
+                ):
+                    rows.append({
+                        "name": name,
+                        "us_per_call": dt * 1e6,
+                        "GBps": size / dt / 1e9,
+                        "size_bytes": size,
+                        "chunk_bytes": chunk,
+                        "groups": g,
+                        "P": npat * g,
+                        "k": k,
+                        "speedup_vs_pergroup": round(speedup, 3),
+                    })
+                    _emit(name, dt * 1e6,
+                          f"GBps={size/dt/1e9:.3f};vs_pergroup={speedup:.2f}x")
+    meta = {
+        "host_cores": os.cpu_count(),
+        "baseline": "one StreamScanner(fused=False, shared=False) per length "
+                    "group (per-group fingerprint pass + per-group "
+                    "compaction + two-pass seam)",
+        "fused": "one StreamScanner: single dispatch per chunk, all groups, "
+                 "seam folded in (megakernel executable proxy; kernel pinned "
+                 "bit-identical by tests/test_megascan.py)",
+    }
+    (outdir / "BENCH_megascan.json").write_text(
+        json.dumps({"meta": meta, "rows": rows}, indent=1)
+    )
+
+
 def _bench_shard_child(outpath: str):
     """Runs INSIDE the 8-forced-host-device subprocess bench_shard spawns:
     times ShardedStreamScanner at 64 MB for shard counts {1, 2, 4, 8} vs the
     1-shard StreamScanner baseline, cross-checking counts first, and writes
     the BENCH_shard.json rows."""
     import json
+    import os
 
     import jax
 
@@ -380,7 +480,15 @@ def _bench_shard_child(outpath: str):
             "devices": ndev,
             "speedup_vs_1shard": round(dt_1 / dt, 3),
         })
-    Path(outpath).write_text(json.dumps(rows, indent=1))
+    meta = {
+        # per ROADMAP: 8 forced host devices time-slice the physical cores,
+        # so shard scaling here is pipeline overlap, not linear core scaling
+        "host_cores": os.cpu_count(),
+        "forced_devices": ndev,
+        "baseline": "fused StreamScanner (one dispatch per chunk, "
+                    "count_many end_min seam)",
+    }
+    Path(outpath).write_text(json.dumps({"meta": meta, "rows": rows}, indent=1))
 
 
 def bench_shard(outdir: Path):
@@ -416,7 +524,7 @@ def bench_shard(outdir: Path):
     )
     if res.returncode != 0:
         raise RuntimeError("bench_shard subprocess failed")
-    for row in json.loads(out.read_text()):
+    for row in json.loads(out.read_text())["rows"]:
         _emit(row["name"], row["us_per_call"],
               f"GBps={row['GBps']:.3f};shards={row['shards']};"
               f"vs_1shard={row['speedup_vs_1shard']:.2f}x")
@@ -470,6 +578,9 @@ def main():
     # fixed sizes for the same reason: the stream rows (16/64/256 MB + the
     # 32 MB 3-group fingerprint-sharing rows) are the PR's perf trajectory
     bench_stream(outdir)
+    # fixed grid: 16/64/256 MB x 1/3/5 groups x k in {0,1} — the megakernel
+    # PR's fused-vs-pergroup acceptance artifact
+    bench_megascan(outdir)
     bench_shard(outdir)
     bench_pipeline(outdir)
     bench_roofline_report(outdir)

@@ -74,20 +74,28 @@ def mismatch_counts(index: TextIndex, plan: PatternPlan) -> jnp.ndarray:
     return mm
 
 
-def match_group_approx(index: TextIndex, plan: PatternPlan, k: int) -> jnp.ndarray:
+def match_group_approx(
+    index: TextIndex, plan: PatternPlan, k: int, end_min=None
+) -> jnp.ndarray:
     """bool (B, P, n) k-mismatch match-start mask.  Dense by design: for full
     masks the output write dominates (same argument as the exact engine's
-    _match_group_b), so the counting filter runs at every position."""
+    _match_group_b), so the counting filter runs at every position.
+    ``end_min`` is the streaming seam gate (engine.match_many)."""
     ok = mismatch_counts(index, plan) <= k
-    return ok & _valid_starts(index, plan.m)[:, None, :]
+    return ok & _valid_starts(index, plan.m, end_min)[:, None, :]
 
 
-def _dense_count_approx(index: TextIndex, plan: PatternPlan, k: int) -> jnp.ndarray:
-    return match_group_approx(index, plan, k).sum(-1, dtype=jnp.int32)
+def _dense_count_approx(
+    index: TextIndex, plan: PatternPlan, k: int, end_min=None
+) -> jnp.ndarray:
+    return match_group_approx(index, plan, k, end_min).sum(-1, dtype=jnp.int32)
 
 
 def _approx_candidates(
-    index: TextIndex, plan: PatternPlan, bank: Optional[FingerprintBank] = None
+    index: TextIndex,
+    plan: PatternPlan,
+    bank: Optional[FingerprintBank] = None,
+    end_min=None,
 ):
     """Relaxed-LUT candidate blocks: one O(n) window fingerprint + probe
     (independent of P and k), compacted to APPROX_CAND_BLOCK granularity.
@@ -97,7 +105,7 @@ def _approx_candidates(
     if bank is None:
         bank = FingerprintBank(index.packed)
     h = bank.window_fp(plan.m, plan.kbits)
-    cand = plan.relaxed_lut[h] & _valid_starts(index, plan.m)
+    cand = plan.relaxed_lut[h] & _valid_starts(index, plan.m, end_min)
     C = APPROX_CAND_BLOCK
     nblk = -(-n // C)
     pad = nblk * C - n
@@ -116,7 +124,8 @@ def _block_frac(plan: PatternPlan) -> float:
 
 
 def _approx_verify_counts(
-    index: TextIndex, plan: PatternPlan, k: int, blk_any, budget, nblk
+    index: TextIndex, plan: PatternPlan, k: int, blk_any, budget, nblk,
+    end_min=None,
 ) -> jnp.ndarray:
     """Gather candidate blocks, count mismatches at all C positions x P
     patterns on the packed gathered rows, scatter-add per-text counts."""
@@ -141,6 +150,10 @@ def _approx_verify_counts(
         )
     starts = bstart[:, None] + jnp.arange(C, dtype=jnp.int32)[None, :]
     in_row = starts <= (index.lengths[bvec][:, None] - m)
+    if end_min is not None:
+        in_row = in_row & (
+            starts + (m - 1) >= jnp.asarray(end_min, jnp.int32)
+        )
     ok = (mm <= k) & (in_row & live[:, None])[:, :, None]
     sums = ok.sum(axis=1, dtype=jnp.int32)  # (nb, P)
     counts = jnp.zeros((B, P), jnp.int32)
@@ -152,6 +165,7 @@ def count_group_approx(
     plan: PatternPlan,
     k: int,
     bank: Optional[FingerprintBank] = None,
+    end_min=None,
 ) -> jnp.ndarray:
     """int32 (B, P) k-mismatch occurrence counts: relaxed-LUT sparse path
     when the plan carries a usable gate, dense counting otherwise."""
@@ -172,11 +186,13 @@ def count_group_approx(
         and _block_frac(plan) <= BLOCK_FRAC_MAX
     )
     if not gated:
-        return _dense_count_approx(index, plan, k)
-    blk_any, budget, nblk = _approx_candidates(index, plan, bank)
+        return _dense_count_approx(index, plan, k, end_min)
+    blk_any, budget, nblk = _approx_candidates(index, plan, bank, end_min)
     return lax.cond(
         blk_any.sum(dtype=jnp.int32) <= budget,
-        lambda _: _approx_verify_counts(index, plan, k, blk_any, budget, nblk),
-        lambda _: _dense_count_approx(index, plan, k),
+        lambda _: _approx_verify_counts(
+            index, plan, k, blk_any, budget, nblk, end_min
+        ),
+        lambda _: _dense_count_approx(index, plan, k, end_min),
         None,
     )

@@ -485,30 +485,49 @@ def compile_patterns_cached(
 # Matchers (one per regime).  Each returns mask (B, P, n) or counts (B, P).
 # ---------------------------------------------------------------------------
 
-def _valid_starts(index: TextIndex, m: int) -> jnp.ndarray:
+def _valid_starts(
+    index: TextIndex, m: int, end_min=None
+) -> jnp.ndarray:
     """(B, n) — True where a length-m occurrence may start.  Encodes the
     ragged-padding contract: windows never cross a row's true end, so
-    patterns cannot match across document boundaries or inside padding."""
+    patterns cannot match across document boundaries or inside padding.
+
+    ``end_min`` (traced scalar or None) is the streaming seam bound
+    (DESIGN.md §11): when given, a start additionally survives only if its
+    occurrence ENDS at or past ``end_min`` (start + m - 1 >= end_min).  This
+    is the fused form of the StreamScanner overlap-prefix subtraction — the
+    occurrences the two-pass path subtracts via the prefix sub-index are
+    exactly the ones this bound excludes — so the seam correction costs one
+    compare inside the same gate instead of a second index + count pass.
+    None compiles to the exact pre-fusion jaxpr (resident callers pay
+    nothing)."""
     n = index.n
-    return jnp.arange(n, dtype=jnp.int32)[None, :] <= (index.lengths[:, None] - m)
+    pos = jnp.arange(n, dtype=jnp.int32)[None, :]
+    ok = pos <= (index.lengths[:, None] - m)
+    if end_min is not None:
+        ok = ok & (pos + (m - 1) >= jnp.asarray(end_min, jnp.int32))
+    return ok
 
 
 def _match_group_a(
-    index: TextIndex, plan: PatternPlan, bank: Optional[FingerprintBank] = None
+    index: TextIndex,
+    plan: PatternPlan,
+    bank: Optional[FingerprintBank] = None,
+    end_min=None,
 ) -> jnp.ndarray:
     """m < 4: dense shifted byte compares (EPSMa, batched over B and P)."""
     del bank  # no fingerprint machinery in this regime
     t = index.text
-    acc = _valid_starts(index, plan.m)[:, None, :]
+    acc = _valid_starts(index, plan.m, end_min)[:, None, :]
     for j in range(plan.m):
         acc = acc & (shift_left(t, j)[:, None, :] == plan.patterns[None, :, j, None])
     return acc
 
 
-def _dense_b(index: TextIndex, plan: PatternPlan) -> jnp.ndarray:
+def _dense_b(index: TextIndex, plan: PatternPlan, end_min=None) -> jnp.ndarray:
     """Stacked-anchor dense compare: AND over packed word compares.  This is
     the exact EPSMb filter+verify fused — also the overflow fallback."""
-    acc = _valid_starts(index, plan.m)[:, None, :]
+    acc = _valid_starts(index, plan.m, end_min)[:, None, :]
     for i, o in enumerate(_word_offsets(plan.m)):
         w = shift_left(index.packed, o)
         acc = acc & (w[:, None, :] == plan.anchors[None, :, i, None])
@@ -516,7 +535,10 @@ def _dense_b(index: TextIndex, plan: PatternPlan) -> jnp.ndarray:
 
 
 def _b_candidates(
-    index: TextIndex, plan: PatternPlan, bank: Optional[FingerprintBank] = None
+    index: TextIndex,
+    plan: PatternPlan,
+    bank: Optional[FingerprintBank] = None,
+    end_min=None,
 ):
     """Shared-text candidate generation for EPSMb: one O(n) fingerprint +
     union-LUT probe (independent of P), compacted to CAND_BLOCK granularity.
@@ -526,7 +548,7 @@ def _b_candidates(
     if bank is None:
         bank = FingerprintBank(index.packed)
     h = bank.window_fp(plan.m, plan.kbits)  # (B, n)
-    cand = plan.lut_any[h] & _valid_starts(index, plan.m)
+    cand = plan.lut_any[h] & _valid_starts(index, plan.m, end_min)
     C = CAND_BLOCK
     nblk = -(-n // C)
     pad = nblk * C - n
@@ -562,7 +584,18 @@ def _gather_candidate_rows(
     return pack_u32(rows), bvec, bstart, live
 
 
-def _b_verify(index: TextIndex, plan: PatternPlan, blk_any, budget, nblk):
+def _start_gate(index: TextIndex, m: int, starts, bvec, end_min):
+    """Per-gathered-start validity: inside the row's true length, plus the
+    streaming seam bound when one is given (see _valid_starts)."""
+    ok = starts <= (index.lengths[bvec][:, None] - m)
+    if end_min is not None:
+        ok = ok & (starts + (m - 1) >= jnp.asarray(end_min, jnp.int32))
+    return ok
+
+
+def _b_verify(
+    index: TextIndex, plan: PatternPlan, blk_any, budget, nblk, end_min=None
+):
     """Gather candidate blocks, re-pack them, verify all positions x patterns.
 
     Returns (ok (nb, C, P), bvec (nb,), starts (nb, C) with n as the
@@ -578,20 +611,25 @@ def _b_verify(index: TextIndex, plan: PatternPlan, blk_any, budget, nblk):
         eq = w[:, :, None] == plan.anchors[None, None, :, i]
         ok = eq if ok is None else ok & eq
     starts = bstart[:, None] + jnp.arange(C, dtype=jnp.int32)[None, :]
-    in_row = starts <= (index.lengths[bvec][:, None] - m)
+    in_row = _start_gate(index, m, starts, bvec, end_min)
     ok = ok & (in_row & live[:, None])[:, :, None]
     starts = jnp.where(in_row & live[:, None], starts, n)
     return ok, bvec, starts
 
 
-def _dense_count(index: TextIndex, plan: PatternPlan, dense_fn) -> jnp.ndarray:
+def _dense_count(
+    index: TextIndex, plan: PatternPlan, dense_fn, end_min=None
+) -> jnp.ndarray:
     """Counts via the dense mask (overflow fallback only — the sparse paths
     never materialize (B, P, n))."""
-    return dense_fn(index, plan).sum(-1, dtype=jnp.int32)
+    return dense_fn(index, plan, end_min).sum(-1, dtype=jnp.int32)
 
 
 def _match_group_b(
-    index: TextIndex, plan: PatternPlan, bank: Optional[FingerprintBank] = None
+    index: TextIndex,
+    plan: PatternPlan,
+    bank: Optional[FingerprintBank] = None,
+    end_min=None,
 ) -> jnp.ndarray:
     del bank  # dense path — no text-side fingerprint
     # For full (B, P, n) masks the stacked-anchor dense compare is already
@@ -599,10 +637,12 @@ def _match_group_b(
     # a candidate scatter of the same size measured ~70x slower.  The union
     # LUT earns its keep on the reduced outputs (_count_group_b), where the
     # (B, P, n) intermediate can be skipped entirely.
-    return _dense_b(index, plan)
+    return _dense_b(index, plan, end_min)
 
 
-def _b_verify_pid(index: TextIndex, plan: PatternPlan, blk_any, budget, nblk):
+def _b_verify_pid(
+    index: TextIndex, plan: PatternPlan, blk_any, budget, nblk, end_min=None
+):
     """Distinct-fingerprint fast verify: each candidate position names its one
     claimed pattern through the pid payload LUT, so verification gathers and
     compares a SINGLE anchor row per position — O(nb * C) work instead of
@@ -621,7 +661,7 @@ def _b_verify_pid(index: TextIndex, plan: PatternPlan, blk_any, budget, nblk):
     for i, o in enumerate(_word_offsets(m)):
         ok = ok & (rows_packed[:, o : o + C] == sel[:, :, i])
     starts = bstart[:, None] + jnp.arange(C, dtype=jnp.int32)[None, :]
-    ok = ok & (starts <= index.lengths[bvec][:, None] - m) & live[:, None]
+    ok = ok & _start_gate(index, m, starts, bvec, end_min) & live[:, None]
     return ok.astype(jnp.int32), bvec, pid
 
 
@@ -642,21 +682,26 @@ def _sparse_b_eligible(index: TextIndex, plan: PatternPlan) -> bool:
 
 
 def _count_group_b(
-    index: TextIndex, plan: PatternPlan, bank: Optional[FingerprintBank] = None
+    index: TextIndex,
+    plan: PatternPlan,
+    bank: Optional[FingerprintBank] = None,
+    end_min=None,
 ) -> jnp.ndarray:
     B, n = index.text.shape
     P = plan.n_patterns
     if not _sparse_b_eligible(index, plan):
-        return _dense_count(index, plan, _dense_b)
-    blk_any, budget, nblk = _b_candidates(index, plan, bank)
+        return _dense_count(index, plan, _dense_b, end_min)
+    blk_any, budget, nblk = _b_candidates(index, plan, bank, end_min)
 
     def sparse_pid(_):
-        ok, bvec, pid = _b_verify_pid(index, plan, blk_any, budget, nblk)
+        ok, bvec, pid = _b_verify_pid(
+            index, plan, blk_any, budget, nblk, end_min
+        )
         counts = jnp.zeros((B, P), jnp.int32)
         return counts.at[bvec[:, None], pid].add(ok, mode="drop")
 
     def sparse_all(_):
-        ok, bvec, _ = _b_verify(index, plan, blk_any, budget, nblk)
+        ok, bvec, _ = _b_verify(index, plan, blk_any, budget, nblk, end_min)
         # reduce the block axis with a batched matvec: XLA-CPU's plain
         # bool-sum reduce runs at ~5ns/element, the dot lowers to the fast
         # GEMV path (measured 92ms -> 7ms on the budget-sized ok tensor)
@@ -671,13 +716,16 @@ def _count_group_b(
     return lax.cond(
         blk_any.sum(dtype=jnp.int32) <= budget,
         sparse,
-        lambda _: _dense_count(index, plan, _dense_b),
+        lambda _: _dense_count(index, plan, _dense_b, end_min),
         None,
     )
 
 
 def _count_groups_b_shared(
-    index: TextIndex, plans: Sequence[PatternPlan], bank: FingerprintBank
+    index: TextIndex,
+    plans: Sequence[PatternPlan],
+    bank: FingerprintBank,
+    end_min=None,
 ) -> jnp.ndarray:
     """Multi-group EPSMb counting with ONE shared candidate pass.
 
@@ -704,7 +752,7 @@ def _count_groups_b_shared(
     union = None
     for p in plans:
         h = bank.window_fp(p.m, p.kbits)
-        cand = p.lut_any[h] & _valid_starts(index, p.m)
+        cand = p.lut_any[h] & _valid_starts(index, p.m, end_min)
         blk = (
             jnp.pad(cand, ((0, 0), (0, nblk * C - n)))
             .reshape(B, nblk, C)
@@ -728,7 +776,7 @@ def _count_groups_b_shared(
         starts = bstart[:, None] + jnp.arange(C, dtype=jnp.int32)[None, :]
         outs = []
         for p in plans:
-            in_row = starts <= (index.lengths[bvec][:, None] - p.m)
+            in_row = _start_gate(index, p.m, starts, bvec, end_min)
             ok_pos = in_row & live[:, None]
             if p.distinct:
                 # pid fast path on the shared rows: O(nb * C) per group
@@ -764,7 +812,7 @@ def _count_groups_b_shared(
 
     def dense(_):
         return jnp.concatenate(
-            [_dense_count(index, p, _dense_b) for p in plans], axis=1
+            [_dense_count(index, p, _dense_b, end_min) for p in plans], axis=1
         )
 
     return lax.cond(union.sum(dtype=jnp.int32) <= budget, sparse, dense, None)
@@ -772,8 +820,10 @@ def _count_groups_b_shared(
 
 # Fallback for EPSMc overflow: dense shifted byte compares — O(m) passes but
 # memory-bounded at (B, P, n).  Same computation as the EPSMa matcher, which
-# is exact for every m.
-_dense_c = _match_group_a
+# is exact for every m.  (A wrapper, not an alias: _dense_count passes
+# end_min as the 3rd positional, which must not bind to `bank`.)
+def _dense_c(index: TextIndex, plan: PatternPlan, end_min=None) -> jnp.ndarray:
+    return _match_group_a(index, plan, None, end_min)
 
 
 def _c_candidates(index: TextIndex, plan: PatternPlan):
@@ -793,7 +843,7 @@ def _c_candidates(index: TextIndex, plan: PatternPlan):
     return ht, cand, stride, noff_used, budget
 
 
-def _c_verify(index, plan, ht, cand, stride, noff_used, budget):
+def _c_verify(index, plan, ht, cand, stride, noff_used, budget, end_min=None):
     """Verify candidate blocks against all P patterns at the <= stride
     offsets, gated by the LUT's pattern-id payload bitmask."""
     B, n = index.text.shape
@@ -819,6 +869,8 @@ def _c_verify(index, plan, ht, cand, stride, noff_used, budget):
         win = rows[:, front - j : front - j + m]  # window starting at bsel - j
         st = bsel - j
         in_row = (st >= 0) & (st <= index.lengths[bvec] - m)
+        if end_min is not None:
+            in_row = in_row & (st + (m - 1) >= jnp.asarray(end_min, jnp.int32))
         ok = (
             pgate
             & (live & in_row)[:, None]
@@ -833,17 +885,22 @@ def _c_verify(index, plan, ht, cand, stride, noff_used, budget):
 
 
 def _match_group_c(
-    index: TextIndex, plan: PatternPlan, bank: Optional[FingerprintBank] = None
+    index: TextIndex,
+    plan: PatternPlan,
+    bank: Optional[FingerprintBank] = None,
+    end_min=None,
 ) -> jnp.ndarray:
     del bank  # keyed by aligned block fingerprints, not window fingerprints
     B, n = index.text.shape
     P = plan.n_patterns
     if index.block_fp.shape[1] == 0:
-        return _dense_c(index, plan)
+        return _dense_c(index, plan, end_min)
     ht, cand, stride, noff_used, budget = _c_candidates(index, plan)
 
     def sparse(_):
-        ok, b_all, st_all = _c_verify(index, plan, ht, cand, stride, noff_used, budget)
+        ok, b_all, st_all = _c_verify(
+            index, plan, ht, cand, stride, noff_used, budget, end_min
+        )
         out = jnp.zeros((B, P, n + 1), jnp.bool_)
         out = out.at[
             b_all[:, None, None], jnp.arange(P)[None, None, :], st_all[:, None, None]
@@ -851,37 +908,45 @@ def _match_group_c(
         return out[:, :, :n]
 
     return lax.cond(
-        cand.sum(dtype=jnp.int32) <= budget, sparse, lambda _: _dense_c(index, plan), None
+        cand.sum(dtype=jnp.int32) <= budget,
+        sparse,
+        lambda _: _dense_c(index, plan, end_min),
+        None,
     )
 
 
 def _count_group_c(
-    index: TextIndex, plan: PatternPlan, bank: Optional[FingerprintBank] = None
+    index: TextIndex,
+    plan: PatternPlan,
+    bank: Optional[FingerprintBank] = None,
+    end_min=None,
 ) -> jnp.ndarray:
     del bank  # keyed by aligned block fingerprints, not window fingerprints
     B = index.batch
     if index.block_fp.shape[1] == 0:
-        return _dense_c(index, plan).sum(-1, dtype=jnp.int32)
+        return _dense_c(index, plan, end_min).sum(-1, dtype=jnp.int32)
     ht, cand, stride, noff_used, budget = _c_candidates(index, plan)
 
     def sparse(_):
-        ok, b_all, _ = _c_verify(index, plan, ht, cand, stride, noff_used, budget)
+        ok, b_all, _ = _c_verify(
+            index, plan, ht, cand, stride, noff_used, budget, end_min
+        )
         counts = jnp.zeros((B, plan.n_patterns), jnp.int32)
         return counts.at[b_all].add(ok.astype(jnp.int32), mode="drop")
 
     return lax.cond(
         cand.sum(dtype=jnp.int32) <= budget,
         sparse,
-        lambda _: _dense_count(index, plan, _dense_c),
+        lambda _: _dense_count(index, plan, _dense_c, end_min),
         None,
     )
 
 
 _MATCH = {"a": _match_group_a, "b": _match_group_b, "c": _match_group_c}
 _COUNT = {
-    "a": lambda idx, plan, bank=None: _match_group_a(idx, plan).sum(
-        -1, dtype=jnp.int32
-    ),
+    "a": lambda idx, plan, bank=None, end_min=None: _match_group_a(
+        idx, plan, None, end_min
+    ).sum(-1, dtype=jnp.int32),
     "b": _count_group_b,
     "c": _count_group_c,
 }
@@ -899,7 +964,11 @@ def _effective_k(plan: PatternPlan, k: Optional[int]) -> int:
 
 
 def match_many(
-    index: TextIndex, plans: Sequence[PatternPlan], *, k: Optional[int] = None
+    index: TextIndex,
+    plans: Sequence[PatternPlan],
+    *,
+    k: Optional[int] = None,
+    end_min: Optional[int] = None,
 ) -> jnp.ndarray:
     """bool[B, P_total, n] match-start masks, rows in plan-concatenated order
     (use :func:`plan_order` to map back to the original pattern order).
@@ -907,7 +976,11 @@ def match_many(
     ``k`` is the mismatch budget (repro.approx): mask[b, p, i] is True iff
     the m-byte window at i differs from pattern p in at most k bytes.  k=0
     (or exact-compiled plans with k=None) runs the exact matchers unchanged —
-    bit-identical to the pre-approx engine."""
+    bit-identical to the pre-approx engine.
+
+    ``end_min`` keeps only occurrences ENDING at position >= end_min (the
+    streaming seam gate — DESIGN.md §11): equivalent to subtracting a
+    prefix-window scan, fused into the candidate gates of every regime."""
     if not plans:
         return jnp.zeros((index.batch, 0, index.n), jnp.bool_)
     bank = FingerprintBank(index.packed)
@@ -915,16 +988,21 @@ def match_many(
     for p in plans:
         kk = _effective_k(p, k)
         if kk == 0:
-            outs.append(_MATCH[p.regime](index, p, bank))
+            outs.append(_MATCH[p.regime](index, p, bank, end_min))
         else:
             from repro.approx import counting
 
-            outs.append(counting.match_group_approx(index, p, kk))
+            outs.append(counting.match_group_approx(index, p, kk, end_min))
     return jnp.concatenate(outs, axis=1)
 
 
 def count_many(
-    index: TextIndex, plans: Sequence[PatternPlan], *, k: Optional[int] = None
+    index: TextIndex,
+    plans: Sequence[PatternPlan],
+    *,
+    k: Optional[int] = None,
+    end_min: Optional[int] = None,
+    shared: bool = True,
 ) -> jnp.ndarray:
     """int32[B, P_total] occurrence counts — the reduced hot path: the
     exact and relaxed-gated paths never materialize the (B, P, n) mask.
@@ -933,27 +1011,41 @@ def count_many(
     (B, P, n) mismatch mask before reducing.
 
     All groups draw their window fingerprints from ONE FingerprintBank
-    prefix accumulation, and >= 2 sparse-eligible EPSMb groups additionally
-    share a single candidate compaction (_count_groups_b_shared) — G length
-    groups cost one pass over the packed view, not G (DESIGN.md §9)."""
+    prefix accumulation, and every sparse-eligible EPSMb group additionally
+    shares a single candidate compaction (_count_groups_b_shared) — G length
+    groups cost one pass over the packed view, not G (DESIGN.md §9).  The
+    shared pass runs even for a single eligible group so mixed plan sets
+    never silently fall back to the slower per-group compaction.
+
+    ``end_min`` as in :func:`match_many` (streaming seam gate).
+
+    ``shared=False`` disables the shared-compaction routing and counts every
+    group through its own per-group matcher (_COUNT dispatch) — the
+    pre-fusion per-group reference path benchmarks and oracle tests pin
+    against."""
     if not plans:
         return jnp.zeros((index.batch, 0), jnp.int32)
     bank = FingerprintBank(index.packed)
     outs: List[Any] = [None] * len(plans)
-    # >= 2 exact EPSMb groups on the sparse path: count them together
-    # through the shared candidate pass (one fingerprint traversal + one
-    # compaction for all of them — see _count_groups_b_shared)
-    shared = [
+    # Exact EPSMb groups on the sparse path: count them together through
+    # the shared candidate pass (one fingerprint traversal + one compaction
+    # for all of them — see _count_groups_b_shared).  A single eligible
+    # group still routes here: the shared pass degenerates gracefully and
+    # keeps the dispatch count flat across mixed plan sets.
+    shared_idx = [
         i
         for i, p in enumerate(plans)
-        if _effective_k(p, k) == 0
+        if shared
+        and _effective_k(p, k) == 0
         and p.regime == "b"
         and _sparse_b_eligible(index, p)
     ]
-    if len(shared) >= 2:
-        joint = _count_groups_b_shared(index, [plans[i] for i in shared], bank)
+    if len(shared_idx) >= 1:
+        joint = _count_groups_b_shared(
+            index, [plans[i] for i in shared_idx], bank, end_min
+        )
         col = 0
-        for i in shared:
+        for i in shared_idx:
             P = plans[i].n_patterns
             outs[i] = joint[:, col : col + P]
             col += P
@@ -962,11 +1054,11 @@ def count_many(
             continue
         kk = _effective_k(p, k)
         if kk == 0:
-            outs[i] = _COUNT[p.regime](index, p, bank)
+            outs[i] = _COUNT[p.regime](index, p, bank, end_min)
         else:
             from repro.approx import counting
 
-            outs[i] = counting.count_group_approx(index, p, kk, bank)
+            outs[i] = counting.count_group_approx(index, p, kk, bank, end_min)
     return jnp.concatenate(outs, axis=1)
 
 

@@ -61,7 +61,6 @@ from repro.core import engine
 from repro.core.engine import PatternPlan
 from repro.core.epsm import EPSMC_BETA
 from repro.core.stream import (
-    DEFAULT_CHUNK_BYTES,
     Compressed,
     StreamScanner,
     _as_chunks,
@@ -224,20 +223,27 @@ class ShardedStreamScanner:
         self,
         plans: Sequence[PatternPlan],
         n_shards: Optional[int] = None,
-        chunk_bytes: int = DEFAULT_CHUNK_BYTES,
+        chunk_bytes="auto",
         *,
         k: Optional[int] = None,
         devices=None,
         max_retries: int = 1,
+        fused: bool = True,
+        use_kernel: bool = False,
     ):
         self.plans = tuple(plans)
-        template = StreamScanner(self.plans, chunk_bytes, k=k)
+        template = StreamScanner(
+            self.plans, chunk_bytes, k=k, fused=fused, use_kernel=use_kernel
+        )
         self.overlap = template.overlap
         self.max_m = template.max_m
         self.n_patterns = template.n_patterns
         self.order = template.order
-        self.chunk_bytes = chunk_bytes
+        # the template resolves "auto" once; every shard reuses the int
+        self.chunk_bytes = template.chunk_bytes
         self.k = k
+        self.fused = fused
+        self.use_kernel = use_kernel
         if devices is None:
             local = jax.local_devices()
             devices = local if len(local) > 1 else [None]
@@ -270,7 +276,8 @@ class ShardedStreamScanner:
     def _scanner(self, shard_i: int) -> StreamScanner:
         device = self.devices[shard_i % len(self.devices)]
         return StreamScanner(
-            self._plans_on(device), self.chunk_bytes, k=self.k, device=device
+            self._plans_on(device), self.chunk_bytes, k=self.k, device=device,
+            fused=self.fused, use_kernel=self.use_kernel,
         )
 
     def _my_shards(self, n_shards: int) -> range:
@@ -371,7 +378,7 @@ def shard_stream_count(
     *,
     n_shards: Optional[int] = None,
     k: int = 0,
-    chunk_bytes: int = DEFAULT_CHUNK_BYTES,
+    chunk_bytes="auto",
     total_bytes: Optional[int] = None,
 ) -> np.ndarray:
     """int32 (P,) exact (or <= k-mismatch) sharded counts in ORIGINAL

@@ -50,8 +50,10 @@ Two extensions ride on the same seam rule (DESIGN.md §10):
 from __future__ import annotations
 
 import functools
+import logging
+import time
 from collections import deque
-from typing import Iterator, List, Optional, Sequence, Tuple
+from typing import Iterator, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
@@ -62,13 +64,88 @@ from repro.core import engine
 from repro.core.engine import PatternPlan
 from repro.core.epsm import EPSMC_BETA
 
-# Default device window capacity (bytes).  ~4 MiB keeps per-chunk dispatch
-# overhead amortized while the whole working set (window + packed + block_fp
-# + fingerprint temporaries, ~9.5 bytes/byte) stays far below any device's
-# memory; tune per backend via StreamScanner(chunk_bytes=...).
+_LOG = logging.getLogger("repro.stream")
+
+# Floor device window capacity (bytes) for adaptive sizing, and the value a
+# backend with no memory stats and negligible dispatch overhead lands on.
+# ~4 MiB keeps per-chunk dispatch overhead amortized while the working set
+# (window + packed + block_fp + fingerprint temporaries, ~9.5 bytes/byte)
+# stays far below any device's memory.
 DEFAULT_CHUNK_BYTES = 1 << 22
+# Adaptive sizing bounds: never below 1 MiB (seam overhead dominates), never
+# above 128 MiB (diminishing amortization, fast fallback compile times).
+MIN_CHUNK_BYTES = 1 << 20
+MAX_CHUNK_BYTES = 1 << 27
 # read() granularity for file-like sources
 _READ_BYTES = 1 << 20
+
+_DISPATCH_OVERHEAD_S: Optional[float] = None
+
+
+def _dispatch_overhead_s() -> float:
+    """One-time measured per-dispatch overhead of this backend (seconds):
+    the amortized cost of pushing one trivial jitted computation through the
+    dispatch path.  Cached for the process — the probe is a few dozen tiny
+    dispatches, microseconds each."""
+    global _DISPATCH_OVERHEAD_S
+    if _DISPATCH_OVERHEAD_S is None:
+        f = jax.jit(lambda x: x + 1)
+        x = jnp.zeros((8,), jnp.int32)
+        f(x).block_until_ready()  # compile outside the timed region
+        reps = 32
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            x = f(x)
+        x.block_until_ready()
+        _DISPATCH_OVERHEAD_S = (time.perf_counter() - t0) / reps
+    return _DISPATCH_OVERHEAD_S
+
+
+def auto_chunk_bytes(
+    *,
+    device=None,
+    overhead_frac: float = 0.02,
+    assumed_gbps: float = 1.0,
+) -> int:
+    """Adaptive chunk size: device memory budget + measured dispatch
+    overhead, replacing the fixed 4 MiB default (DESIGN.md §11).
+
+    Two constraints pick the size:
+
+      * overhead floor — the one-time dispatch-overhead probe bounds the
+        per-chunk fixed cost; the chunk must be big enough that this cost is
+        <= ``overhead_frac`` of the chunk's scan time at a conservative
+        ``assumed_gbps`` streaming rate;
+      * memory ceiling — the streaming working set is ~9.5 device bytes per
+        streamed byte (StreamScanner.device_bytes_per_chunk), so the chunk
+        must keep that working set inside a fraction of the device's free
+        memory (``memory_stats`` when the backend reports it, a conservative
+        512 MiB budget otherwise — CPU backends are host-RAM-backed).
+
+    The result is clamped to [MIN_CHUNK_BYTES, MAX_CHUNK_BYTES] and rounded
+    to the EPSMc beta block.
+    """
+    dev = device
+    if dev is None:
+        dev = jax.local_devices()[0]
+    stats = {}
+    try:
+        stats = dev.memory_stats() or {}
+    except Exception:  # backends without memory introspection
+        stats = {}
+    limit = stats.get("bytes_limit")
+    if limit:
+        free = max(int(limit) - int(stats.get("bytes_in_use", 0)), limit // 8)
+        budget = free // 4
+    else:
+        budget = 512 << 20
+    mem_cap = budget // 10  # ~9.5 working-set bytes per streamed byte
+    floor = int(
+        _dispatch_overhead_s() / overhead_frac * assumed_gbps * 1e9
+    )
+    chunk = max(DEFAULT_CHUNK_BYTES, floor)
+    chunk = max(MIN_CHUNK_BYTES, min(chunk, mem_cap, MAX_CHUNK_BYTES))
+    return _round_up(chunk, EPSMC_BETA)
 
 def _round_up(x: int, mult: int) -> int:
     return -(-x // mult) * mult
@@ -194,21 +271,43 @@ def _as_chunks(source) -> Iterator[np.ndarray]:
             yield from _as_chunks(piece)
 
 
-@functools.lru_cache(maxsize=1)
-def _jitted_count_step():
+@functools.lru_cache(maxsize=None)
+def _jitted_count_step(fused: bool, shared: bool = True):
     """Jit the chunk step lazily: donating the count accumulator lets XLA
     reuse its buffer across chunks on accelerator backends (CPU ignores
     donation and warns, so it is gated on the backend) — and the backend
     query must NOT run at import time, or merely importing repro.core would
     initialize XLA before the user can configure it."""
     donate = (0,) if jax.default_backend() != "cpu" else ()
+    step = _fused_count_step if fused else _count_step
     return functools.partial(
-        jax.jit, static_argnames=("ov", "k"), donate_argnums=donate
-    )(_count_step)
+        jax.jit, static_argnames=("ov", "k", "shared"), donate_argnums=donate
+    )(functools.partial(step, shared=shared))
 
 
-def _count_step(counts, window, length, prev_ov, plans, *, ov: int, k):
-    """One streaming chunk: full-window counts minus overlap-prefix counts.
+def _fused_count_step(
+    counts, window, length, prev_ov, plans, *, ov: int, k, shared: bool = True
+):
+    """One streaming chunk, seam correction FUSED into the scan: the
+    ``end_min=prev_ov`` gate inside every matcher keeps exactly the
+    occurrences whose END falls in the newly-streamed region, replacing the
+    reference path's separate overlap-prefix subtraction (DESIGN.md §11
+    proves the two produce identical integers).  One count_many — i.e. one
+    fingerprint-bank pass and one shared compaction — per chunk."""
+    del ov  # the fused gate needs no prefix sub-index
+    idx = engine.build_index(window[None, :], jnp.asarray(length)[None])
+    return counts + engine.count_many(
+        idx, plans, k=k, end_min=prev_ov, shared=shared
+    )[0]
+
+
+def _count_step(
+    counts, window, length, prev_ov, plans, *, ov: int, k, shared: bool = True
+):
+    """Reference two-pass chunk step: full-window counts minus
+    overlap-prefix counts.  Kept as the fallback and the oracle the fused
+    paths (``_fused_count_step`` and the megascan kernel) are pinned
+    against in tests/test_stream.py and tests/test_megascan.py.
 
     ``window`` is (N,) uint8 with ``length`` valid bytes, the first
     ``prev_ov`` of which were carried from the previous window (0 for the
@@ -219,21 +318,43 @@ def _count_step(counts, window, length, prev_ov, plans, *, ov: int, k):
     its cost is noise next to the O(N) window scan, and both run in this one
     dispatch."""
     idx = engine.build_index(window[None, :], jnp.asarray(length)[None])
-    c = engine.count_many(idx, plans, k=k)
+    c = engine.count_many(idx, plans, k=k, shared=shared)
     if ov:
         pre_idx = engine.build_index(
             window[None, :ov], jnp.minimum(jnp.asarray(prev_ov), length)[None]
         )
-        c = c - engine.count_many(pre_idx, plans, k=k)
+        c = c - engine.count_many(pre_idx, plans, k=k, shared=shared)
     return counts + c[0]
 
 
-@functools.partial(jax.jit, static_argnames=("k",))
-def _mask_step(window, length, prev_ov, plans, *, k):
+@functools.lru_cache(maxsize=None)
+def _jitted_kernel_step(spec):
+    """Chunk step through the fused Pallas megakernel (kernels/megascan):
+    ONE pallas dispatch stages each tile once and answers every group, the
+    k-mismatch accumulator, and the seam gate together.  ``spec`` is the
+    static MegaSpec; the (length, prev_ov) scalars are traced operands, so
+    one compilation serves every chunk."""
+    from repro.kernels.megascan import megascan_count_window
+
+    def step(counts, window, length, prev_ov, plans):
+        return counts + megascan_count_window(
+            window, plans, spec, length=length, prev_ov=prev_ov
+        )
+
+    donate = (0,) if jax.default_backend() != "cpu" else ()
+    return jax.jit(step, donate_argnums=donate)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "fused"))
+def _mask_step(window, length, prev_ov, plans, *, k, fused: bool = True):
     """(P_total, N) bool match-start mask for one chunk, de-duplicated at the
     seam: a start survives iff its occurrence ENDS at or past ``prev_ov``
-    (ends inside the carried prefix belong to the previous chunk)."""
+    (ends inside the carried prefix belong to the previous chunk).  The
+    fused form pushes that gate into the matchers' candidate masks
+    (``end_min``); the reference form post-filters — bit-identical."""
     idx = engine.build_index(window[None, :], jnp.asarray(length)[None])
+    if fused:
+        return engine.match_many(idx, plans, k=k, end_min=prev_ov)[0]
     mask = engine.match_many(idx, plans, k=k)[0]
     pos = jnp.arange(window.shape[0], dtype=jnp.int32)
     keeps = []
@@ -257,6 +378,19 @@ class StreamScanner:
     ``engine.count_many(..., k=)``; None runs each plan at the budget it was
     compiled for.
 
+    ``chunk_bytes`` may be an int or ``"auto"`` (the default): auto picks
+    the window from the device memory budget and a one-time measured
+    dispatch-overhead probe (:func:`auto_chunk_bytes`) and logs the chosen
+    value; the resolved size is ``self.chunk_bytes``.
+
+    ``fused`` (default True) runs each chunk with the seam correction fused
+    into the matchers (``count_many(..., end_min=prev_ov)`` — one scan, no
+    overlap-prefix sub-index); False keeps the reference two-pass step,
+    bit-identical by DESIGN.md §11.  ``use_kernel`` additionally routes
+    counting through the fused Pallas megakernel (kernels/megascan) when
+    the plan set is kernel-eligible — ineligible sets fall back to the
+    pure-JAX fused path (logged), never to different results.
+
     ``device`` pins every dispatch (windows, accumulator, plan state) to one
     local device; the sharded scanner (core/shard_stream.py) uses this to
     fan shards out over the fleet's devices, whose async dispatch queues
@@ -275,10 +409,13 @@ class StreamScanner:
     def __init__(
         self,
         plans: Sequence[PatternPlan],
-        chunk_bytes: int = DEFAULT_CHUNK_BYTES,
+        chunk_bytes: Union[int, str] = "auto",
         *,
         k: Optional[int] = None,
         device=None,
+        fused: bool = True,
+        shared: bool = True,
+        use_kernel: bool = False,
     ):
         self.plans = tuple(plans)
         if not self.plans:
@@ -287,13 +424,35 @@ class StreamScanner:
         if device is not None:
             self.plans = engine.replicate_plans(self.plans, device)
         self.k = k
+        self.fused = bool(fused)
+        # shared=False pins the pre-fusion per-group engine path (each group
+        # pays its own fingerprint pass + compaction — count_many shared=False);
+        # the megascan benchmark's per-group baseline.
+        self.shared = bool(shared)
+        self.spec = None
+        if use_kernel:
+            from repro.kernels.megascan import build_mega_spec
+
+            self.spec = build_mega_spec(self.plans, k=k)
+            if self.spec is None:
+                _LOG.info(
+                    "megascan kernel ineligible for this plan set; "
+                    "using the pure-JAX fused path"
+                )
+        if chunk_bytes == "auto":
+            chunk_bytes = auto_chunk_bytes(device=device)
+            _LOG.info(
+                "StreamScanner auto chunk_bytes=%d (dispatch overhead "
+                "%.1f us)", chunk_bytes, 1e6 * _dispatch_overhead_s(),
+            )
+        self.chunk_bytes = int(chunk_bytes)
         self.max_m = max(p.m for p in self.plans)
         # overlap >= max_m - 1 carries every possibly-straddling occurrence
         # start; rounding up to the beta block keeps each window's start on
         # a global beta boundary, so chunk-local aligned block fingerprints
         # coincide with the global ones (EPSMc block-phase carry).
         self.overlap = _round_up(self.max_m - 1, EPSMC_BETA)
-        window = max(int(chunk_bytes), self.overlap + EPSMC_BETA)
+        window = max(self.chunk_bytes, self.overlap + EPSMC_BETA)
         self.window_bytes = _round_up(window, EPSMC_BETA)
         self.step_bytes = self.window_bytes - self.overlap
         self.n_patterns = sum(p.n_patterns for p in self.plans)
@@ -375,7 +534,11 @@ class StreamScanner:
 
     def _dispatch_count(self, counts, window_dev, length, prev_ov):
         self.dispatch_count += 1
-        return _jitted_count_step()(
+        if self.spec is not None:
+            return _jitted_kernel_step(self.spec)(
+                counts, window_dev, length, prev_ov, self.plans
+            )
+        return _jitted_count_step(self.fused, self.shared)(
             counts, window_dev, length, prev_ov, self.plans,
             ov=self.overlap, k=self.k,
         )
@@ -459,7 +622,9 @@ class StreamScanner:
 
     def _flush_mask(self, dev, length, prev_ov, base, L):
         self.dispatch_count += 1
-        mask = _mask_step(dev, length, prev_ov, self.plans, k=self.k)
+        mask = _mask_step(
+            dev, length, prev_ov, self.plans, k=self.k, fused=self.fused
+        )
         return base, int(prev_ov), np.asarray(jax.device_get(mask))[:, :L]
 
     def positions_many(
@@ -506,11 +671,13 @@ def stream_count(
     patterns: Sequence,
     *,
     k: int = 0,
-    chunk_bytes: int = DEFAULT_CHUNK_BYTES,
+    chunk_bytes: Union[int, str] = "auto",
+    use_kernel: bool = False,
 ) -> np.ndarray:
-    """int32 (P,) exact (or <= k-mismatch) counts in ORIGINAL pattern order."""
+    """int32 (P,) exact (or <= k-mismatch) counts in ORIGINAL pattern order.
+    ``chunk_bytes="auto"`` (default) sizes the window adaptively."""
     plans = engine.compile_patterns_cached(list(patterns), k=k)
-    sc = StreamScanner(plans, chunk_bytes, k=k)
+    sc = StreamScanner(plans, chunk_bytes, k=k, use_kernel=use_kernel)
     counts = sc.count_many(source)
     out = np.zeros_like(counts)
     out[sc.order] = counts
@@ -522,7 +689,7 @@ def find_stream(
     pattern,
     *,
     k: int = 0,
-    chunk_bytes: int = DEFAULT_CHUNK_BYTES,
+    chunk_bytes: Union[int, str] = "auto",
 ) -> np.ndarray:
     """Whole-stream bool match-start mask for ONE pattern, assembled on the
     host chunk by chunk (host memory is O(n); device stays O(chunk))."""

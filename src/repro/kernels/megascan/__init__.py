@@ -1,0 +1,22 @@
+"""Fused streaming megakernel: one Pallas dispatch answers every length
+group, the k-mismatch counter, and the seam correction over one staged
+text tile (DESIGN.md §11)."""
+
+from .megascan import DEFAULT_TILE, megascan_pallas
+from .ops import (
+    MegaSpec,
+    VMEM_BUDGET,
+    build_mega_spec,
+    megascan_count_window,
+)
+from .ref import megascan_count_window_ref
+
+__all__ = [
+    "DEFAULT_TILE",
+    "MegaSpec",
+    "VMEM_BUDGET",
+    "build_mega_spec",
+    "megascan_count_window",
+    "megascan_count_window_ref",
+    "megascan_pallas",
+]

@@ -1,0 +1,315 @@
+"""Fused streaming megakernel: every length group, the k-mismatch counter,
+and the seam correction answered over ONE staged text tile.
+
+The paper's packed matchers win because they touch each text word once with
+wide instructions; "Technology Beats Algorithms" (PAPERS.md) makes the
+thesis explicit — passes over memory decide exact-matching speed.  The
+engine's per-group matchers each re-read the text, so G length groups cost
+G passes.  This kernel stages a text tile into VMEM once and, over that one
+staged tile:
+
+  (a) accumulates the shared FingerprintBank prefix terms (the salted
+      strided-word chain of DESIGN.md §9) so every EPSMb/approx group reads
+      its window fingerprint as a prefix of one running sum — the on-chip
+      mirror of ``engine.FingerprintBank``;
+  (b) runs every eligible EPSMb group's union-LUT gate + anchor-word
+      verification in one shot (the on-chip generalization of
+      ``engine._count_groups_b_shared``), extended to the m >= 16 EPSMc
+      block-LUT groups via strided aligned-block fingerprints probed
+      against the pattern-id payload table;
+  (c) folds in the k-mismatch int8 XOR accumulator (kernels/approx) behind
+      a compile-time flag (a group with mismatch budget k > 0 becomes an
+      'x' group);
+  (d) fuses the StreamScanner seam correction: occurrences are gated by
+      ``end >= prev_ov`` inside the same dispatch, replacing the separate
+      overlap-prefix subtraction pass (DESIGN.md §11 proves the two forms
+      produce identical integers).
+
+Grid (ntiles,): one program per tile of ONE streaming window (streaming
+windows are single text rows).  Tiles are staged with a prev|cur|next halo
+(three BlockSpecs over the same padded buffer, the kernels/epsmc idiom) so
+b-group windows may run into the next tile and c-group candidate starts may
+reach back into the previous one.  The window length L and the seam bound
+prev_ov ride in as a (2,) int32 operand so ONE compiled kernel serves every
+chunk of a stream (only the last chunk's L and the first chunk's prev_ov
+differ).
+
+Output: (ntiles, P_total) int32 partial counts, P_total columns in
+plan-concatenated order; the wrapper reduces over tiles.  Counts — not
+masks — keep the kernel's output O(P) per tile, matching count_many's
+reduced hot path.
+
+On real TPU hardware the constant-index slices and small gathers lower to
+vector loads with static offsets; interpret=True validates the logic on CPU
+(tests/test_megascan.py pins it against engine.count_many, the reference
+oracle).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.engine import _n_strided_words, _word_offsets
+from repro.core.packing import FP_MULT, PACK, WORD_SALTS
+
+DEFAULT_TILE = 4096
+
+
+def _pat_word(pat32, j):
+    return (
+        pat32[j]
+        | (pat32[j + 1] << 8)
+        | (pat32[j + 2] << 16)
+        | (pat32[j + 3] << 24)
+    )
+
+
+def _nonzero_bytes(x):
+    """Mismatching byte lanes (0..4) of each uint32 XOR word, as int8."""
+    acc = jnp.zeros(x.shape, jnp.int8)
+    for s in (0, 8, 16, 24):
+        acc = acc + (((x >> jnp.uint32(s)) & jnp.uint32(0xFF)) != 0).astype(
+            jnp.int8
+        )
+    return acc
+
+
+def _mega_kernel(*refs, tile: int, groups, p_total: int, beta: int):
+    """refs = prev, cur, nxt, scal, weights, *group_operands, out.
+
+    ``groups`` is a static tuple of GroupSpec (ops.py); each names its kind
+    and how many operand refs it consumes.  All python loops unroll at trace
+    time — the jaxpr is one straight-line pass over the staged tile.
+    """
+    prev_ref, cur_ref, nxt_ref, scal_ref, w_ref = refs[:5]
+    out_ref = refs[-1]
+    in_refs = refs[5:-1]
+
+    local = jnp.concatenate([prev_ref[...], cur_ref[...], nxt_ref[...]])
+    b32 = local.astype(jnp.uint32)
+    L = scal_ref[0]       # true window length (<= padded ntiles * tile)
+    ov = scal_ref[1]      # seam bound: keep occurrences ENDING at >= ov
+    t0 = pl.program_id(0) * tile
+    pos = t0 + jax.lax.broadcasted_iota(jnp.int32, (tile,), 0)
+
+    # ---- the tile is packed ONCE; every group reuses these registers ------
+    words = {}
+
+    def word(o):
+        w = words.get(o)
+        if w is None:
+            w = b32[tile + o : tile + o + tile]
+            w = w | (b32[tile + o + 1 : tile + o + 1 + tile] << 8)
+            w = w | (b32[tile + o + 2 : tile + o + 2 + tile] << 16)
+            w = w | (b32[tile + o + 3 : tile + o + 3 + tile] << 24)
+            words[o] = w
+        return w
+
+    # ---- shared FingerprintBank prefix chain (salt i <-> offset 4i) -------
+    prefix = {0: jnp.zeros((tile,), jnp.uint32)}
+
+    def strided_sum(nterms):
+        done = max(t for t in prefix if t <= nterms)
+        acc = prefix[done]
+        for i in range(done, nterms):
+            acc = acc + word(PACK * i) * jnp.uint32(int(WORD_SALTS[i]))
+            prefix[i + 1] = acc
+        return prefix[nterms]
+
+    def window_fp(m, kbits):
+        ns = _n_strided_words(m)
+        v = strided_sum(ns)
+        if m % PACK and m >= PACK:
+            v = v + word(m - PACK) * jnp.uint32(int(WORD_SALTS[ns]))
+        return (
+            (v * jnp.uint32(int(FP_MULT))) >> jnp.uint32(32 - kbits)
+        ).astype(jnp.int32)
+
+    def seam_gate(starts, m):
+        """The fused overlap-prefix subtraction (DESIGN.md §11): a valid
+        occurrence starts in [0, L-m] AND ends at >= ov."""
+        return (starts <= L - m) & (starts + (m - 1) >= ov)
+
+    out_ref[0, :] = jnp.zeros((p_total,), jnp.int32)
+
+    ri = 0
+    for g in groups:
+        m, P, col = g.m, g.n_patterns, g.col
+        if g.kind == "a":
+            # dense shifted byte compares — EPSMa, exact for any m < 4
+            pat_ref = in_refs[ri]
+            ri += 1
+            gate = seam_gate(pos, m)
+            sums = []
+            for pi in range(P):
+                acc = gate
+                for j in range(m):
+                    acc = acc & (
+                        local[tile + j : tile + j + tile] == pat_ref[pi, j]
+                    )
+                sums.append(jnp.sum(acc.astype(jnp.int32)))
+            out_ref[0, col : col + P] = jnp.stack(sums)
+
+        elif g.kind == "b":
+            # union-LUT gate + packed anchor-word verify (EPSMb)
+            pat_ref, lut_ref = in_refs[ri], in_refs[ri + 1]
+            ri += 2
+            h = window_fp(m, g.kbits)
+            cand = lut_ref[h] & seam_gate(pos, m)
+            gwords = {o: word(o) for o in _word_offsets(m)}
+
+            # candidate-free tile (the common case at density P/2^k): the
+            # whole verification branch is skipped — no per-lane divergence
+            @pl.when(cand.any())
+            def _verify_b(pat_ref=pat_ref, cand=cand, gwords=gwords,
+                          m=m, P=P, col=col):
+                sums = []
+                for pi in range(P):
+                    pat32 = pat_ref[pi, :].astype(jnp.uint32)
+                    acc = cand
+                    for o in _word_offsets(m):
+                        acc = acc & (gwords[o] == _pat_word(pat32, o))
+                    sums.append(jnp.sum(acc.astype(jnp.int32)))
+                out_ref[0, col : col + P] = jnp.stack(sums)
+
+        elif g.kind == "c":
+            # strided aligned-block fingerprints + pattern-id payload bits
+            # (EPSMc).  Each tile owns the inspected blocks starting inside
+            # it; candidate windows may START in the previous tile (start =
+            # block - offset), which the halo covers.  Exactly-once: every
+            # occurrence contains ONE inspected block at offset < stride
+            # (the dedup block), and each block belongs to one tile.
+            pat_ref = in_refs[ri]
+            lutany_ref = in_refs[ri + 1]
+            bits_ref = in_refs[ri + 2]
+            ri += 3
+            stride, noff = g.stride, g.noff_used
+            nblk = tile // stride + 1
+            first = (t0 + stride - 1) // stride
+            bg = (
+                first + jax.lax.broadcasted_iota(jnp.int32, (nblk,), 0)
+            ) * stride  # global inspected-block starts
+            own = bg < t0 + tile
+            lb = bg - t0 + tile  # local (halo) coords
+            bidx = lb[:, None] + jax.lax.broadcasted_iota(
+                jnp.int32, (nblk, beta), 1
+            )
+            h = jnp.dot(
+                local[bidx].astype(jnp.int32),
+                w_ref[...].astype(jnp.int32),
+                preferred_element_type=jnp.int32,
+            ) & ((1 << g.kbits) - 1)  # (nblk,)
+            cand = lutany_ref[h] & own
+            # built with iota, not captured constants (self-contained jaxpr)
+            pids = jax.lax.broadcasted_iota(jnp.int32, (P,), 0)
+            shifts = (pids % 32).astype(jnp.uint32)
+            wsel = pids // 32
+
+            @pl.when(cand.any())
+            def _verify_c(pat_ref=pat_ref, bits_ref=bits_ref, h=h,
+                          cand=cand, bg=bg, lb=lb, shifts=shifts, wsel=wsel,
+                          stride=stride, noff=noff, nblk=nblk, m=m, P=P,
+                          col=col):
+                bits = bits_ref[h]  # (nblk, W) uint32 payloads
+                pgate = (
+                    (bits[:, wsel] >> shifts[None, :]) & jnp.uint32(1)
+                ) != 0  # (nblk, P): patterns that registered this fp
+                acc = jnp.zeros((P,), jnp.int32)
+                for j in range(noff):
+                    lw = lb - j
+                    ws = bg - j
+                    widx = lw[:, None] + jax.lax.broadcasted_iota(
+                        jnp.int32, (nblk, m), 1
+                    )
+                    okj = jnp.all(
+                        local[widx][:, None, :] == pat_ref[...][None, :, :],
+                        axis=-1,
+                    )  # (nblk, P)
+                    gatej = cand & (ws >= 0) & seam_gate(ws, m)
+                    okj = okj & pgate & gatej[:, None]
+                    acc = acc + okj.astype(jnp.int32).sum(axis=0)
+                out_ref[0, col : col + P] = acc
+
+        else:  # g.kind == "x": k-mismatch int8 accumulator (compile-time k)
+            pat_ref = in_refs[ri]
+            ri += 1
+            gate = seam_gate(pos, m)
+            if g.use_lut:
+                lut_ref = in_refs[ri]
+                ri += 1
+                cand = lut_ref[window_fp(m, g.kbits)] & gate
+            else:
+                cand = gate
+            nw = m // PACK  # strided words only: overlap would double-count
+            sw = [word(PACK * i) for i in range(nw)]
+            cap = jnp.int8(g.k + 1)  # budget-exhausted sentinel / clamp
+
+            @pl.when(cand.any())
+            def _verify_x(pat_ref=pat_ref, cand=cand, sw=sw, cap=cap,
+                          nw=nw, m=m, P=P, col=col, k=g.k):
+                sums = []
+                for pi in range(P):
+                    pat32 = pat_ref[pi, :].astype(jnp.uint32)
+                    mm = jnp.zeros((tile,), jnp.int8)
+                    for i in range(nw):
+                        miss = _nonzero_bytes(
+                            sw[i] ^ _pat_word(pat32, PACK * i)
+                        )
+                        mm = jnp.minimum(mm + miss, cap)
+                    for j in range(nw * PACK, m):
+                        miss = (
+                            local[tile + j : tile + j + tile]
+                            != pat_ref[pi, j]
+                        ).astype(jnp.int8)
+                        mm = jnp.minimum(mm + miss, cap)
+                    ok = cand & (mm <= jnp.int8(k))
+                    sums.append(jnp.sum(ok.astype(jnp.int32)))
+                out_ref[0, col : col + P] = jnp.stack(sums)
+
+
+def megascan_pallas(
+    text_padded: jnp.ndarray,   # ((ntiles + 2) * tile,) uint8
+    scalars: jnp.ndarray,       # (2,) int32: [length, prev_ov]
+    weights: jnp.ndarray,       # (beta,) int32 block-hash weights
+    group_operands,             # flat tuple, ops.GroupSpec order
+    *,
+    groups,
+    p_total: int,
+    tile: int,
+    beta: int,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Raw pallas_call -> (ntiles, p_total) int32 per-tile counts.
+
+    text_padded layout: [tile zeros | window padded to ntiles*tile | tile
+    zeros] (the kernels/epsmc halo idiom).
+    """
+    ntiles = text_padded.shape[0] // tile - 2
+    kernel = functools.partial(
+        _mega_kernel, tile=tile, groups=groups, p_total=p_total, beta=beta
+    )
+    in_specs = [
+        pl.BlockSpec((tile,), lambda i: (i,)),      # prev tile
+        pl.BlockSpec((tile,), lambda i: (i + 1,)),  # current tile
+        pl.BlockSpec((tile,), lambda i: (i + 2,)),  # next tile
+        pl.BlockSpec((2,), lambda i: (0,)),         # [L, prev_ov]
+        pl.BlockSpec((weights.shape[0],), lambda i: (0,)),
+    ]
+    for op in group_operands:
+        # default-arg bind: a late-binding `op.ndim` would resolve to the
+        # LAST operand's rank for every index map
+        in_specs.append(
+            pl.BlockSpec(op.shape, lambda i, nd=op.ndim: (0,) * nd)
+        )
+    return pl.pallas_call(
+        kernel,
+        grid=(ntiles,),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, p_total), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((ntiles, p_total), jnp.int32),
+        interpret=interpret,
+    )(text_padded, text_padded, text_padded, scalars, weights, *group_operands)

@@ -1,0 +1,219 @@
+"""Megakernel dispatch layer: static group specs, VMEM budgeting, and the
+host-side wrapper that turns (window, plans, k, prev_ov) into one fused
+pallas_call.
+
+``build_mega_spec`` is the compile-time half: it walks a plan set ONCE and
+decides, per length group, which in-kernel matcher answers it ('a'/'b'/'c'
+exact, 'x' k-mismatch) and whether the whole set fits the kernel's VMEM
+budget.  Ineligible sets return None and the caller (core/stream.py) keeps
+the pure-JAX fused path — the kernel never silently changes results, it is
+either bit-identical or not used (tests/test_megascan.py pins the identity
+against the engine oracle in ref.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.engine import PatternPlan, _word_offsets
+from repro.core.epsm import EPSMC_BETA, _epsmc_stride
+from repro.core.packing import PACK, fingerprint_weights
+
+from .megascan import DEFAULT_TILE, megascan_pallas
+
+# VMEM ceiling for the kernel's resident state (staged halo + packed
+# registers + LUTs + patterns + working tiles).  16 MiB is the canonical
+# per-core VMEM size; budgeting to 12 MiB leaves headroom for Mosaic
+# scratch.  Exceeding it returns spec=None -> pure-JAX fused fallback.
+VMEM_BUDGET = 12 << 20
+
+
+@dataclasses.dataclass(frozen=True)
+class GroupSpec:
+    """Static per-group kernel plan (hashable: jit static argument)."""
+
+    kind: str        # 'a' | 'b' | 'c' | 'x'
+    m: int
+    n_patterns: int
+    kbits: int
+    col: int         # first output column (plan-concatenated order)
+    k: int = 0       # mismatch budget ('x' only)
+    use_lut: bool = False   # 'x': relaxed-LUT gate available
+    stride: int = 0  # 'c' only
+    noff_used: int = 0  # 'c' only
+
+
+@dataclasses.dataclass(frozen=True)
+class MegaSpec:
+    """Static kernel configuration for one (plans, k) combination."""
+
+    groups: Tuple[GroupSpec, ...]
+    p_total: int
+    tile: int
+    beta: int
+    vmem_bytes: int
+
+
+def _effective_k(plan: PatternPlan, k: Optional[int]) -> int:
+    return plan.k if k is None else int(k)
+
+
+def _group_vmem(g: GroupSpec, tile: int) -> int:
+    """Resident bytes this group adds: operands + its widest working set."""
+    b = g.n_patterns * g.m  # patterns
+    work = 0
+    if g.kind == "b":
+        b += 1 << g.kbits  # union LUT (bool)
+        work = 4 * tile    # candidate/verify registers
+    elif g.kind == "c":
+        nwords = -(-g.n_patterns // 32)
+        b += (1 << g.kbits) + 4 * nwords * (1 << g.kbits)  # lut_any + bits
+        nblk = tile // max(g.stride, 1) + 1
+        work = nblk * (g.m + g.n_patterns) * 4  # window gather + ok matrix
+    elif g.kind == "x":
+        if g.use_lut:
+            b += 1 << g.kbits  # relaxed LUT (bool)
+        work = 5 * tile  # int8 accumulator + XOR registers
+    else:  # 'a'
+        work = 2 * tile
+    return b + work
+
+
+def build_mega_spec(
+    plans: Sequence[PatternPlan],
+    *,
+    k: Optional[int] = None,
+    tile: int = DEFAULT_TILE,
+) -> Optional[MegaSpec]:
+    """Static spec for the fused kernel, or None when any group is
+    ineligible / the set blows the VMEM budget (DESIGN.md §11 rules):
+
+      * EPSMc groups need stride + m <= tile so a candidate window never
+        escapes the 3-tile halo (start reaches back < stride, body extends
+        m past the owned block);
+      * every group needs m <= tile - PACK + 1 so the packed-word slices
+        stay inside the halo;
+      * k > 0 groups ('x') verify with the int8 clamped accumulator; the
+        relaxed-LUT gate is used only when the plan was compiled for >= k
+        (the reachable set covers any smaller budget — engine semantics).
+    """
+    if not plans:
+        return None
+    groups = []
+    col = 0
+    beta = EPSMC_BETA
+    for plan in plans:
+        kk = _effective_k(plan, k)
+        P, m = plan.n_patterns, plan.m
+        if m > tile - PACK + 1:
+            return None
+        if kk > 0:
+            if kk > 127:  # int8 accumulator clamp ceiling
+                return None
+            use_lut = (
+                plan.relaxed_lut is not None and kk <= plan.k and m >= PACK
+            )
+            groups.append(
+                GroupSpec(
+                    kind="x", m=m, n_patterns=P, kbits=plan.kbits, col=col,
+                    k=kk, use_lut=use_lut,
+                )
+            )
+        elif plan.regime == "a":
+            groups.append(
+                GroupSpec(kind="a", m=m, n_patterns=P, kbits=0, col=col)
+            )
+        elif plan.regime == "b":
+            groups.append(
+                GroupSpec(kind="b", m=m, n_patterns=P, kbits=plan.kbits, col=col)
+            )
+        else:
+            stride = _epsmc_stride(m, beta)
+            if stride + m > tile:
+                return None
+            groups.append(
+                GroupSpec(
+                    kind="c", m=m, n_patterns=P, kbits=plan.kbits, col=col,
+                    stride=stride, noff_used=min(stride, m - beta + 1),
+                )
+            )
+        col += P
+    vmem = 3 * tile + 4 * 3 * tile  # staged halo (u8) + packed view (u32)
+    vmem += sum(_group_vmem(g, tile) for g in groups)
+    if vmem > VMEM_BUDGET:
+        return None
+    return MegaSpec(
+        groups=tuple(groups), p_total=col, tile=tile, beta=beta,
+        vmem_bytes=vmem,
+    )
+
+
+def _group_operands(plans: Sequence[PatternPlan], spec: MegaSpec):
+    """Flat operand tuple in the kernel's ref-consumption order."""
+    ops = []
+    for plan, g in zip(plans, spec.groups):
+        ops.append(plan.patterns)
+        if g.kind == "b":
+            ops.append(plan.lut_any)
+        elif g.kind == "c":
+            ops.append(plan.lut_any)
+            ops.append(plan.lut_bits)
+        elif g.kind == "x" and g.use_lut:
+            ops.append(plan.relaxed_lut)
+    return tuple(ops)
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def megascan_count_window(
+    window: jnp.ndarray,
+    plans: Sequence[PatternPlan],
+    spec: MegaSpec,
+    *,
+    length=None,
+    prev_ov=0,
+    interpret: Optional[bool] = None,
+) -> jnp.ndarray:
+    """(P_total,) int32 counts of one streaming window through the fused
+    kernel — plan-concatenated order, bit-identical to
+    ``engine.count_many(build_index(window), plans, k=k, end_min=prev_ov)``
+    (ref.py; pinned by tests/test_megascan.py).
+
+    ``length``/``prev_ov`` may be traced scalars: they ride in as a (2,)
+    operand so one compiled kernel serves every chunk of a stream.
+    """
+    if interpret is None:
+        interpret = _default_interpret()
+    window = jnp.asarray(window, jnp.uint8)
+    n = window.shape[0]
+    if length is None:
+        length = n
+    tile = spec.tile
+    ntiles = max(1, -(-n // tile))
+    pad = ntiles * tile - n
+    text_padded = jnp.pad(window, (tile, pad + tile))
+    scalars = jnp.stack(
+        [
+            jnp.asarray(length, jnp.int32),
+            jnp.asarray(prev_ov, jnp.int32),
+        ]
+    )
+    out = megascan_pallas(
+        text_padded,
+        scalars,
+        fingerprint_weights(spec.beta),
+        _group_operands(plans, spec),
+        groups=spec.groups,
+        p_total=spec.p_total,
+        tile=tile,
+        beta=spec.beta,
+        interpret=interpret,
+    )
+    return out.sum(axis=0, dtype=jnp.int32)

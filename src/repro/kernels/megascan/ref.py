@@ -1,0 +1,28 @@
+"""Reference oracle for the fused megakernel.
+
+The per-group pure-JAX engine IS the specification: one window's fused
+kernel counts must equal ``count_many`` over the same plans with the seam
+gate ``end_min`` — which engine.py proves equivalent to the two-pass
+overlap-prefix subtraction (DESIGN.md §11).  tests/test_megascan.py pins
+the kernel against this for every grid shape and regime mix.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax.numpy as jnp
+
+from repro.core.engine import PatternPlan, build_index, count_many
+
+
+def megascan_count_window_ref(
+    window,
+    plans: Sequence[PatternPlan],
+    *,
+    k: Optional[int] = None,
+    prev_ov: int = 0,
+) -> jnp.ndarray:
+    """(P_total,) int32 — the engine's answer for one streaming window."""
+    idx = build_index(jnp.asarray(window, jnp.uint8))
+    return count_many(idx, plans, k=k, end_min=prev_ov)[0]

@@ -54,6 +54,24 @@ def test_schema_violations_raise(tmp_path):
         rt.validate_paper(rt.PAPER_JSON, {"tables": {}})
 
 
+def test_meta_wrapper_split_and_rendered():
+    """BENCH_*.json may be {"meta": {...}, "rows": [...]} — meta carries
+    measurement caveats (host cores, baseline identity) and must surface in
+    the rendered markdown; malformed meta raises."""
+    rows, meta = rt.split_meta("BENCH_shard.json", {"meta": {"host_cores": 2},
+                                                    "rows": [{"x": 1}]})
+    assert rows == [{"x": 1}] and meta == {"host_cores": 2}
+    rows, meta = rt.split_meta("BENCH_shard.json", [{"x": 1}])
+    assert rows == [{"x": 1}] and meta == {}
+    with pytest.raises(rt.SchemaError):
+        rt.split_meta("BENCH_shard.json", {"meta": 3, "rows": []})
+    doc = json.loads((OUTDIR / "BENCH_shard.json").read_text())
+    rows, meta = rt.split_meta("BENCH_shard.json", doc)
+    assert meta.get("host_cores"), "BENCH_shard meta must record host_cores"
+    table = rt.format_rows_table("BENCH_shard.json", rows, meta)
+    assert "host_cores" in table
+
+
 def test_check_mode_detects_drift(tmp_path):
     for f in OUTDIR.glob("BENCH_*.json"):
         (tmp_path / f.name).write_text(f.read_text())

@@ -135,6 +135,53 @@ def test_count_many_shared_b_groups(rng, monkeypatch):
         assert counts[0, row] == want, f"pattern {pid}"
 
 
+def test_count_many_single_eligible_b_group_uses_shared(rng, monkeypatch):
+    """Regression (ISSUE 6 satellite): exactly ONE sparse-eligible EPSMb
+    group in a mixed set must still route through _count_groups_b_shared —
+    previously the `>= 2` routing threshold silently sent mixed sets down
+    the slow per-group path.  Counts stay exact, and the dense lax.cond
+    fallback inside the shared pass must cover the 1-group case too (checked
+    here via the all-same-byte saturating text)."""
+    monkeypatch.setattr(engine, "SPARSE_B_MIN_ELEMS", 0)
+    calls = []
+    orig = engine._count_groups_b_shared
+
+    def spy(index, plans_, bank, end_min=None):
+        calls.append(len(plans_))
+        return orig(index, plans_, bank, end_min)
+
+    monkeypatch.setattr(engine, "_count_groups_b_shared", spy)
+    t = make_text(rng, 4096, 4)
+    # a + b + c: the b group needs >= 4 patterns to be sparse-eligible, the
+    # a/c groups never are — exactly one eligible group total
+    pats = [t[7:9].copy(), t[90:114].copy()]
+    for s in (50, 200, 600, 1100):
+        pats.append(t[s : s + 8].copy())
+    plans = engine.compile_patterns(pats)
+    assert sum(
+        1 for p in plans
+        if p.regime == "b" and engine._sparse_b_eligible(engine.build_index(t), p)
+    ) == 1
+    idx = engine.build_index(t)
+    counts = np.asarray(engine.count_many(idx, plans))
+    assert calls == [1]
+    for row, pid in enumerate(engine.plan_order(plans)):
+        want = int(np.asarray(epsm.find(t, pats[pid])).sum())
+        assert counts[0, row] == want, f"pattern {pid}"
+    # saturating text: the single group's candidates overflow the budget and
+    # the dense lax.cond branch inside the shared pass must stay exact
+    calls.clear()
+    tz = np.zeros(2048, np.uint8)
+    pz = [np.zeros(8, np.uint8)] * 4
+    plans_z = engine.compile_patterns(pz)
+    idx_z = engine.build_index(tz)
+    counts_z = np.asarray(engine.count_many(idx_z, plans_z))
+    assert calls == [1]
+    for row, pid in enumerate(engine.plan_order(plans_z)):
+        want = baselines.naive_np(tz, pz[pid]).sum()
+        assert counts_z[0, row] == want, f"pattern {pid}"
+
+
 def test_count_many_shared_b_groups_overflow_dense(rng, monkeypatch):
     """Adversarial density through the SHARED path: all-same-byte text makes
     every block a union candidate, the budget overflows, and the dense

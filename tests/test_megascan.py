@@ -1,0 +1,161 @@
+"""Fused streaming megakernel (kernels/megascan): kernel-vs-engine-oracle
+bit-identity for every grid shape (ntiles 1..4, partial and exact tiles),
+regime mixes a/b/c, the k-mismatch 'x' groups, seam phases (prev_ov), the
+spec-eligibility rules, and the StreamScanner(use_kernel=True) integration
+with its one-dispatch-per-chunk contract."""
+
+import numpy as np
+import pytest
+
+from repro.core import engine, epsm
+from repro.core.stream import StreamScanner
+from repro.kernels.megascan import (
+    DEFAULT_TILE,
+    build_mega_spec,
+    megascan_count_window,
+    megascan_count_window_ref,
+)
+
+from conftest import make_text
+
+LENGTHS = (2, 5, 8, 13, 16, 24)  # covers regimes a, b (two), b, c (two)
+
+
+def _plans(rng, text, lengths, k=0):
+    pats = []
+    for m in lengths:
+        s = rng.randint(0, len(text) - m + 1)
+        pats.append(text[s : s + m].copy())
+        pats.append(rng.randint(0, 5, size=m).astype(np.uint8))
+    return pats, engine.compile_patterns(pats, k=k)
+
+
+def _check(window, plans, spec, *, k=None, prev_ov=0):
+    got = np.asarray(
+        megascan_count_window(
+            window, plans, spec, prev_ov=prev_ov, interpret=True
+        )
+    )
+    want = np.asarray(
+        megascan_count_window_ref(window, plans, k=k, prev_ov=prev_ov)
+    )
+    np.testing.assert_array_equal(
+        got, want, err_msg=f"n={len(window)} tile={spec.tile} ov={prev_ov}"
+    )
+    return got
+
+
+@pytest.mark.parametrize(
+    "n",
+    [
+        200,        # single partial tile
+        1024,       # exactly one tile
+        1025,       # one tile + 1 byte
+        2048,       # exactly two tiles
+        3000,       # three tiles, last partial
+        4096,       # exactly four tiles
+    ],
+)
+def test_kernel_matches_oracle_every_grid_shape(rng, n):
+    """Interpret-mode kernel == engine oracle for every grid shape: window
+    sizes hitting 1..4 tiles, both exact multiples and partial last tiles,
+    over an a/b/c regime mix."""
+    tile = 1024
+    text = make_text(rng, n, 4)
+    pats, plans = _plans(rng, text, LENGTHS)
+    spec = build_mega_spec(plans, tile=tile)
+    assert spec is not None and spec.tile == tile
+    counts = _check(text, plans, spec)
+    # sanity: extracted patterns actually hit
+    for row, pid in enumerate(engine.plan_order(plans)):
+        want = int(np.asarray(epsm.find(text, pats[pid])).sum())
+        assert counts[row] == want, f"pattern {pid}"
+
+
+@pytest.mark.parametrize("prev_ov", [0, 1, 13, 31, 100])
+def test_kernel_seam_phases(rng, prev_ov):
+    """The in-kernel seam gate (start + m - 1 >= prev_ov) matches the
+    engine's fused end_min semantics at aligned and beta-unaligned
+    overlap phases."""
+    text = make_text(rng, 2500, 4)
+    _, plans = _plans(rng, text, LENGTHS)
+    spec = build_mega_spec(plans, tile=1024)
+    assert spec is not None
+    _check(text, plans, spec, prev_ov=prev_ov)
+
+
+@pytest.mark.parametrize("tile", [256, 512])
+def test_kernel_small_tiles(rng, tile):
+    """Smaller tiles change every group's per-tile geometry (c-group block
+    ownership in particular); identity must hold regardless."""
+    text = make_text(rng, 1500, 4)
+    _, plans = _plans(rng, text, (2, 8, 16))
+    spec = build_mega_spec(plans, tile=tile)
+    assert spec is not None
+    for ov in (0, 7):
+        _check(text, plans, spec, prev_ov=ov)
+
+
+@pytest.mark.parametrize("prev_ov", [0, 13])
+def test_kernel_k_mismatch_groups(rng, prev_ov):
+    """k=1 routes every group through the 'x' int8-accumulator matcher
+    (relaxed-LUT gated where available); identity holds with the seam gate
+    folded in."""
+    text = make_text(rng, 2000, 4)
+    _, plans = _plans(rng, text, (2, 5, 8, 13, 16), k=1)  # m=2: no packed word
+    spec = build_mega_spec(plans, k=1, tile=1024)
+    assert spec is not None
+    assert all(g.kind == "x" for g in spec.groups)
+    assert any(g.use_lut for g in spec.groups)
+    _check(text, plans, spec, k=1, prev_ov=prev_ov)
+
+
+def test_spec_eligibility_rules(rng):
+    """build_mega_spec returns None (pure-JAX fused fallback) for every
+    documented ineligibility: pattern longer than the halo allows, EPSMc
+    stride + m > tile, k beyond the int8 clamp, and empty plan sets."""
+    text = make_text(rng, 4000, 4)
+    _, plans_c = _plans(rng, text, (64,))
+    # m=64: stride+m exceeds a 64-byte tile -> None; big tile -> eligible
+    assert build_mega_spec(plans_c, tile=64) is None
+    assert build_mega_spec(plans_c, tile=1024) is not None
+    _, plans_b = _plans(rng, text, (8,))
+    # m > tile - PACK + 1
+    assert build_mega_spec(plans_b, tile=4) is None
+    # k > 127 blows the int8 clamp ceiling
+    assert build_mega_spec(plans_b, k=128, tile=1024) is None
+    assert build_mega_spec([], tile=1024) is None
+    # default tile accepts the standard mixed set
+    _, plans = _plans(rng, text, LENGTHS)
+    spec = build_mega_spec(plans)
+    assert spec is not None and spec.tile == DEFAULT_TILE
+
+
+def test_stream_scanner_use_kernel_bit_identity(rng):
+    """StreamScanner(use_kernel=True) consumes kernel outputs directly:
+    counts are bit-identical to the per-group reference scanner AND the
+    resident engine, with exactly one dispatch per chunk."""
+    text = make_text(rng, 20_000, 4)
+    pats, plans = _plans(rng, text, LENGTHS)
+    ref = StreamScanner(plans, 2048, fused=False)
+    want = ref.count_many(text)
+    sc = StreamScanner(plans, 2048, use_kernel=True)
+    assert sc.spec is not None
+    n_windows = sum(1 for _ in sc._windows(text))
+    got = sc.count_many(text)
+    assert sc.dispatch_count == n_windows  # exactly 1 dispatch per chunk
+    np.testing.assert_array_equal(got, want)
+    for row, pid in enumerate(sc.order):
+        assert got[row] == int(np.asarray(epsm.find(text, pats[pid])).sum())
+
+
+def test_stream_scanner_use_kernel_falls_back(rng):
+    """When the plan set is kernel-ineligible the scanner silently keeps
+    the pure-JAX fused path (spec=None) and stays exact."""
+    text = make_text(rng, 8_000, 4)
+    pats = [text[100:164].copy()]
+    plans = engine.compile_patterns(pats, k=200)  # k > 127 blows the int8 clamp
+    sc = StreamScanner(plans, 2048, k=200, use_kernel=True)
+    assert sc.spec is None
+    want = StreamScanner(plans, 2048, k=200, fused=False).count_many(text)
+    np.testing.assert_array_equal(sc.count_many(text), want)

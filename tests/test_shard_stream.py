@@ -70,6 +70,23 @@ def test_sharded_bit_identical_to_single_host(rng):
                 )
 
 
+def test_sharded_megakernel_path_bit_identical(rng):
+    """The shard bit-identity sweep through the MEGAKERNEL path: every shard
+    scanner consumes fused Pallas kernel outputs (use_kernel=True,
+    interpret-mode on CPU) and must match the per-group two-pass reference
+    (fused=False) exactly across shard counts."""
+    n = int(rng.randint(3000, 6000))
+    text = make_text(rng, n, 4)
+    plans = engine.compile_patterns(_patterns(rng, text))
+    want = ShardedStreamScanner(plans, 2, CHUNK, fused=False).count_many(text)
+    for S in (1, 3):
+        sc = ShardedStreamScanner(plans, S, CHUNK, use_kernel=True)
+        assert sc._scanner(0).spec is not None  # kernel path really engaged
+        np.testing.assert_array_equal(
+            sc.count_many(text), want, err_msg=f"S={S}"
+        )
+
+
 def test_planted_matches_straddle_every_shard_seam_phase():
     """Occurrences planted across every shard boundary at EVERY straddle
     phase (first byte left of the seam ... last byte right of it) are found

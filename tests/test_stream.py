@@ -94,6 +94,109 @@ def test_seam_occurrence_straddles_every_phase():
         np.testing.assert_array_equal(pos[0], np.asarray(planted), f"m={m}")
 
 
+def test_fused_seam_equals_reference_two_pass(rng):
+    """The fused chunk step (count_many(..., end_min=prev_ov), one scan, no
+    overlap-prefix sub-index) is bit-identical to the reference two-pass
+    subtraction across the full seam property grid: m in {2,4,8,13,16,32},
+    k in {0,1}, every chunk size — counts AND positions."""
+    for k in (0, 1):
+        for trial in range(3):
+            n = int(rng.randint(400, 3000))
+            text = make_text(rng, n, 4)
+            pats = _patterns(rng, text, k)
+            plans = engine.compile_patterns(pats, k=k)
+            chunk = int(CHUNKS[trial % len(CHUNKS)])
+            ref = StreamScanner(plans, chunk, k=k, fused=False)
+            want = ref.count_many(text)
+            got = StreamScanner(plans, chunk, k=k, fused=True).count_many(text)
+            np.testing.assert_array_equal(
+                got, want, err_msg=f"k={k} chunk={chunk} n={n}"
+            )
+            pos_ref = StreamScanner(
+                plans, chunk, k=k, fused=False
+            ).positions_many(text)
+            pos_fused = StreamScanner(
+                plans, chunk, k=k, fused=True
+            ).positions_many(text)
+            for r in range(len(pos_ref)):
+                np.testing.assert_array_equal(
+                    pos_fused[r], pos_ref[r],
+                    err_msg=f"k={k} chunk={chunk} row {r}",
+                )
+
+
+def test_mixed_plans_one_dispatch_per_chunk_shared_path(rng, monkeypatch):
+    """Regression (ISSUE 6 satellite): a MIXED plan set — one sparse-eligible
+    EPSMb group among a/c groups — must still issue exactly ONE jitted
+    dispatch per chunk with counts equal to the per-group reference, i.e.
+    the single-eligible-group case routes through _count_groups_b_shared
+    instead of silently taking the slow per-group path."""
+    monkeypatch.setattr(engine, "SPARSE_B_MIN_ELEMS", 0)
+    text = make_text(rng, 6_000, 4)
+    pats = [
+        text[7:9].copy(),        # EPSMa
+        text[100:108].copy(),    # the ONE sparse-eligible EPSMb group
+        text[200:208].copy(),    # (>= 4 patterns: eligibility floor)
+        text[400:408].copy(),
+        text[900:908].copy(),
+        text[300:324].copy(),    # EPSMc
+    ]
+    plans = engine.compile_patterns(pats)
+    idx = engine.build_index(text)
+    assert (
+        sum(
+            1
+            for p in plans
+            if p.regime == "b" and engine._sparse_b_eligible(idx, p)
+        )
+        == 1
+    )
+    # single eligible group still counts through the shared pass
+    calls = []
+    orig = engine._count_groups_b_shared
+
+    def spy(index, plans_, bank, end_min=None):
+        calls.append(len(plans_))
+        return orig(index, plans_, bank, end_min)
+
+    monkeypatch.setattr(engine, "_count_groups_b_shared", spy)
+    counts = np.asarray(engine.count_many(idx, plans))
+    assert calls == [1]  # routed through the shared candidate pass
+    for row, pid in enumerate(engine.plan_order(plans)):
+        want = int(np.asarray(epsm.find(text, pats[pid])).sum())
+        assert counts[0, row] == want, f"pattern {pid}"
+    # and the streaming loop stays at exactly one dispatch per chunk
+    sc = StreamScanner(plans, 1024)
+    n_windows = sum(1 for _ in sc._windows(text))
+    got = sc.count_many(text)
+    assert sc.dispatch_count == n_windows
+    for row, pid in enumerate(sc.order):
+        want = int(np.asarray(epsm.find(text, pats[pid])).sum())
+        assert got[row] == want, f"pattern {pid}"
+
+
+def test_auto_chunk_bytes_resolved_and_exact(rng):
+    """chunk_bytes="auto" resolves to a sane, beta-aligned size (memory
+    budget + dispatch-overhead probe), is recorded on the scanner, and scans
+    exactly."""
+    from repro.core.epsm import EPSMC_BETA
+    from repro.core.stream import (
+        MAX_CHUNK_BYTES,
+        MIN_CHUNK_BYTES,
+        auto_chunk_bytes,
+    )
+
+    auto = auto_chunk_bytes()
+    assert MIN_CHUNK_BYTES <= auto <= MAX_CHUNK_BYTES
+    assert auto % EPSMC_BETA == 0
+    text = make_text(rng, 5_000, 4)
+    plans = engine.compile_patterns([text[100:108].copy()])
+    sc = StreamScanner(plans)  # default chunk_bytes="auto"
+    assert sc.chunk_bytes == auto
+    want = StreamScanner(plans, 512).count_many(text)
+    np.testing.assert_array_equal(sc.count_many(text), want)
+
+
 def test_one_dispatch_per_chunk_and_bounded_window(rng):
     text = make_text(rng, 10_000, 4)
     plans = engine.compile_patterns([text[50:58].copy(), text[300:316].copy()])
