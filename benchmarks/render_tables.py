@@ -40,6 +40,8 @@ FILE_EXTRAS = {
                          "devices": int},
     "BENCH_megascan.json": {"groups": int, "k": int,
                             "speedup_vs_pergroup": (int, float)},
+    "BENCH_faults.json": {"shards": int, "fault_rate": (int, float),
+                          "ratio_vs_clean": (int, float)},
 }
 # BENCH_paper_tables.json is a dict, not a row list: validated separately.
 PAPER_JSON = "BENCH_paper_tables.json"

@@ -530,6 +530,140 @@ def bench_shard(outdir: Path):
               f"vs_1shard={row['speedup_vs_1shard']:.2f}x")
 
 
+def _bench_faults_child(outpath: str):
+    """Runs INSIDE the 8-forced-host-device subprocess bench_faults spawns:
+    times the sharded scan at 16 MB clean vs under a 5%-per-site fault rate
+    (read errors + truncations + shard crashes, transient, recovered by
+    retry), on both the static and the work-stealing path, cross-checking
+    every configuration against the clean StreamScanner first.  Writes
+    BENCH_faults.json; ``ratio_vs_clean`` is throughput relative to the
+    static clean run — the recovery overhead the chaos CI job tracks."""
+    import json
+    import os
+
+    import jax
+
+    from repro.core import engine as eng
+    from repro.core.shard_stream import ShardedStreamScanner
+    from repro.core.stream import StreamScanner
+    from repro.data import corpus
+    from repro.dist.fault_injection import FaultPlan, FaultyRangeSource
+    from repro.dist.fault_tolerance import BackoffPolicy
+
+    size = 16_000_000
+    chunk = 1 << 22
+    S = 8
+    RATE = 0.05
+    ndev = len(jax.devices())
+    text = corpus.make_corpus("genome", size, seed=0)
+    pats = [text[i * 1009 : i * 1009 + 8].copy() for i in range(8)]
+    plans = eng.compile_patterns(list(pats))
+
+    base_sc = StreamScanner(plans, chunk)
+    base_sc.count_many(text[: 2 * base_sc.window_bytes])  # warm the trace
+    want = base_sc.count_many(text)
+
+    def make_plan():
+        # fresh plan per run: per-key heal counters reset, so every rep
+        # injects the identical fault schedule
+        return FaultPlan(
+            0, read_error_rate=RATE, truncate_rate=RATE, crash_rate=RATE,
+            attempts_per_fault=1,
+        )
+
+    def run(steal: bool, faulty: bool):
+        plan = make_plan() if faulty else None
+        sc = ShardedStreamScanner(
+            plans, S, chunk, max_retries=16, fault_plan=plan, steal=steal,
+            backoff=BackoffPolicy(base_s=0.0, jitter=0.0),
+        )
+        src = FaultyRangeSource(text, plan) if faulty else text
+        return sc.count_many(src), sc
+
+    configs = [
+        ("faults/static_clean/16mb", False, False),
+        ("faults/static_faulty5pct/16mb", False, True),
+        ("faults/steal_clean/16mb", True, False),
+        ("faults/steal_faulty5pct/16mb", True, True),
+    ]
+    observed = {}
+    for name, steal, faulty in configs:
+        got, sc = run(steal, faulty)
+        assert np.array_equal(got, want), f"{name}: faulted scan diverged"
+        observed[name] = {"retries": len(sc.events), "steals": len(sc.steal_events)}
+
+    times = {
+        name: timeit_median(lambda s=steal, f=faulty: run(s, f)[0], reps=3)
+        for name, steal, faulty in configs
+    }
+    dt_clean = times["faults/static_clean/16mb"]
+    rows = []
+    for name, steal, faulty in configs:
+        dt = times[name]
+        rows.append({
+            "name": name,
+            "us_per_call": dt * 1e6,
+            "GBps": size / dt / 1e9,
+            "size_bytes": size,
+            "chunk_bytes": chunk,
+            "shards": S,
+            "devices": ndev,
+            "fault_rate": RATE if faulty else 0.0,
+            "retries": observed[name]["retries"],
+            "steals": observed[name]["steals"],
+            "ratio_vs_clean": round(dt_clean / dt, 3),
+        })
+        _emit(name, dt * 1e6,
+              f"GBps={size/dt/1e9:.3f};vs_clean={dt_clean/dt:.2f}x;"
+              f"retries={observed[name]['retries']}")
+    meta = {
+        "host_cores": os.cpu_count(),
+        "forced_devices": ndev,
+        "fault_model": "FaultPlan(seed=0): 5% read errors + 5% truncations "
+                       "+ 5% shard crashes per site, transient "
+                       "(attempts_per_fault=1), zero-delay backoff",
+        "baseline": "static_clean (no faults, no stealing); ratio_vs_clean "
+                    "= its wall-time / this row's",
+    }
+    Path(outpath).write_text(json.dumps({"meta": meta, "rows": rows}, indent=1))
+
+
+def bench_faults(outdir: Path):
+    """Fault-recovery overhead bench (BENCH_faults.json): clean vs 5%-fault
+    sharded scans, static vs work-stealing, in a subprocess with
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 (same reasoning as
+    bench_shard: device count locks at first jax init)."""
+    import json
+    import os
+    import subprocess
+    import sys
+
+    out = outdir / "BENCH_faults.json"
+    env = {
+        **os.environ,
+        "XLA_FLAGS": "--xla_force_host_platform_device_count=8",
+        "JAX_PLATFORMS": "cpu",
+        "PYTHONPATH": "src" + os.pathsep + os.environ.get("PYTHONPATH", ""),
+    }
+    res = subprocess.run(
+        [
+            sys.executable, "-c",
+            "import sys; sys.path.insert(0, '.'); "
+            "from benchmarks.run import _bench_faults_child; "
+            "_bench_faults_child(sys.argv[1])",
+            str(out),
+        ],
+        env=env,
+        timeout=3600,
+    )
+    if res.returncode != 0:
+        raise RuntimeError("bench_faults subprocess failed")
+    for row in json.loads(out.read_text())["rows"]:
+        _emit(row["name"], row["us_per_call"],
+              f"GBps={row['GBps']:.3f};fault_rate={row['fault_rate']};"
+              f"vs_clean={row['ratio_vs_clean']:.2f}x")
+
+
 def bench_pipeline(outdir: Path):
     from repro.data import corpus
     from repro.data.pipeline import LMDataPipeline
@@ -562,28 +696,41 @@ def main():
     ap.add_argument("--size", type=int, default=400_000)
     ap.add_argument("--full", action="store_true",
                     help="paper-scale: 4MB texts, all 10 lengths")
+    ap.add_argument(
+        "benches", nargs="*",
+        help="bench names to run (default: all); e.g. `bench_faults` or "
+        "`faults stream` — the CI chaos job runs just bench_faults",
+    )
     args = ap.parse_args()
     size = 4_000_000 if args.full else args.size
     outdir = Path("experiments/benchmarks")
     outdir.mkdir(parents=True, exist_ok=True)
 
+    # fixed workload sizes below (1 MB multipattern/approx, the 16-256 MB
+    # stream/megascan/shard/faults grids): the BENCH_*.json artifacts are
+    # the perf trajectory future PRs diff, so their shape must not depend
+    # on --size
+    registry = {
+        "paper_tables": lambda: bench_paper_tables(size, args.full, outdir),
+        "kernels": lambda: bench_kernels(size, outdir),
+        "multipattern": lambda: bench_multipattern(1_000_000, outdir),
+        "approx": lambda: bench_approx(1_000_000, outdir),
+        "stream": lambda: bench_stream(outdir),
+        "megascan": lambda: bench_megascan(outdir),
+        "shard": lambda: bench_shard(outdir),
+        "faults": lambda: bench_faults(outdir),
+        "pipeline": lambda: bench_pipeline(outdir),
+        "roofline": lambda: bench_roofline_report(outdir),
+    }
+    picked = [b[len("bench_"):] if b.startswith("bench_") else b
+              for b in args.benches]
+    for b in picked:
+        if b not in registry:
+            ap.error(f"unknown bench {b!r}; choose from {sorted(registry)}")
+
     print("name,us_per_call,derived")
-    bench_paper_tables(size, args.full, outdir)
-    bench_kernels(size, outdir)
-    # fixed 1 MB workload: BENCH_multipattern.json / BENCH_approx.json are
-    # the perf-trajectory artifacts future PRs diff, so their shape must
-    # not depend on --size
-    bench_multipattern(1_000_000, outdir)
-    bench_approx(1_000_000, outdir)
-    # fixed sizes for the same reason: the stream rows (16/64/256 MB + the
-    # 32 MB 3-group fingerprint-sharing rows) are the PR's perf trajectory
-    bench_stream(outdir)
-    # fixed grid: 16/64/256 MB x 1/3/5 groups x k in {0,1} — the megakernel
-    # PR's fused-vs-pergroup acceptance artifact
-    bench_megascan(outdir)
-    bench_shard(outdir)
-    bench_pipeline(outdir)
-    bench_roofline_report(outdir)
+    for name in (picked or registry):
+        registry[name]()
     # regenerate the markdown from the refreshed JSONs through the SAME
     # renderer CI's benchgate drift check runs
     from benchmarks import render_tables

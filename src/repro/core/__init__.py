@@ -27,14 +27,24 @@ from repro.core.engine import (
 )
 from repro.core.multipattern import PatternSet, contains_any, count_multi, find_multi
 from repro.core.stream import Compressed, StreamScanner, find_stream, stream_count
-from repro.core.shard_stream import ShardedStreamScanner, shard_stream_count
+from repro.core.shard_stream import (
+    PartialScanResult,
+    ShardedStreamScanner,
+    StealEvent,
+    shard_stream_count,
+)
+from repro.core.remote_source import FakeObjectStore, RemoteRangeReader
 from repro.core.baselines import BASELINES, naive_np
 
 __all__ = [
     "Compressed",
+    "FakeObjectStore",
     "FingerprintBank",
+    "PartialScanResult",
     "PatternPlan",
+    "RemoteRangeReader",
     "ShardedStreamScanner",
+    "StealEvent",
     "StreamScanner",
     "shard_stream_count",
     "TextIndex",

@@ -404,6 +404,15 @@ class StreamScanner:
     a second-level window seam, DESIGN.md §10).  ``start - len(prefix)``
     must sit on a beta block boundary so chunk-local aligned block
     fingerprints still coincide with the global ones.
+
+    ``watchdog`` arms a :class:`~repro.dist.fault_tolerance.StepWatchdog`
+    around every chunk's HOST step — source read, decompression, window
+    assembly — the part where a slow disk or object store stalls (device
+    dispatch is asynchronous and surfaces at the final sync, not here).  ``policy="raise"`` turns a stalled chunk into a
+    ``StragglerAbort`` a supervisor can act on; ``on_straggler(event)``
+    observes flagged chunks under the non-raising policies (the elastic
+    sharded scanner sheds a straggling shard's trailing range there,
+    DESIGN.md §12).
     """
 
     def __init__(
@@ -416,6 +425,8 @@ class StreamScanner:
         fused: bool = True,
         shared: bool = True,
         use_kernel: bool = False,
+        watchdog=None,
+        on_straggler=None,
     ):
         self.plans = tuple(plans)
         if not self.plans:
@@ -458,6 +469,8 @@ class StreamScanner:
         self.n_patterns = sum(p.n_patterns for p in self.plans)
         self.order = engine.plan_order(self.plans)
         self.dispatch_count = 0
+        self.watchdog = watchdog
+        self.on_straggler = on_straggler
 
     # -- host-side re-chunking ---------------------------------------------
 
@@ -530,6 +543,30 @@ class StreamScanner:
             carry = win[max(0, L - ov) : L].copy() if ov else carry
             base += L - len(carry)
 
+    def _steps(self, source, *, prefix=None, start: int = 0):
+        """The `_windows` iterator with the optional per-chunk watchdog armed
+        around each window's PRODUCTION (source read, decompress, assembly):
+        the stall site for slow storage.  A flagged chunk either raises
+        (policy="raise") or is reported to ``on_straggler`` with the
+        recorded event."""
+        wd = self.watchdog
+        if wd is None:
+            yield from self._windows(source, prefix=prefix, start=start)
+            return
+        it = self._windows(source, prefix=prefix, start=start)
+        step = 0
+        while True:
+            wd.start_step(step)
+            try:
+                item = next(it)
+            except StopIteration:
+                wd.end_step()  # close the pair; an instant EOF never flags
+                return
+            if wd.end_step() is not None and self.on_straggler is not None:
+                self.on_straggler(wd.events[-1])
+            step += 1
+            yield item
+
     # -- device loop --------------------------------------------------------
 
     def _dispatch_count(self, counts, window_dev, length, prev_ov):
@@ -557,7 +594,7 @@ class StreamScanner:
         is consumed, and nothing here waits on device results at all."""
         counts = self._zero_counts()
         pending = None
-        for win, L, carry_len, _base in self._windows(
+        for win, L, carry_len, _base in self._steps(
             source, prefix=prefix, start=start
         ):
             dev = jax.device_put(win, self.device)
@@ -587,7 +624,7 @@ class StreamScanner:
         counts = self._zero_counts()
         pending = None
         chunks = 0
-        for win, L, carry_len, _base in self._windows(source):
+        for win, L, carry_len, _base in self._steps(source):
             dev = jax.device_put(win, self.device)
             if pending is not None:
                 counts = self._dispatch_count(counts, *pending)
@@ -610,7 +647,7 @@ class StreamScanner:
         With ``prefix``/``start``, bases are global stream positions and
         occurrences ending before ``start`` are dropped (previous range's)."""
         pending = None
-        for win, L, carry_len, base in self._windows(
+        for win, L, carry_len, base in self._steps(
             source, prefix=prefix, start=start
         ):
             dev = jax.device_put(win, self.device)

@@ -1,6 +1,8 @@
 """Fault tolerance for long training runs and sharded scans: injected faults
 (restart tests), shard-retry bookkeeping for the sharded streaming scanner,
-a per-step straggler watchdog, and the abort signal it raises.
+retry classification (retryable I/O vs. fatal programming errors), jittered
+exponential backoff, a per-step straggler watchdog, and the abort signal it
+raises.  DESIGN.md §12 is the contract.
 
 The watchdog keeps a rolling window of recent step durations and flags a step
 as a straggler when it exceeds ``factor`` x the rolling median.  What happens
@@ -17,13 +19,20 @@ then is the ``policy``:
 from __future__ import annotations
 
 import dataclasses
+import random
 import statistics
 import time
-from typing import List, Optional
+from typing import Callable, List, Optional
 
 
 class InjectedFault(RuntimeError):
     """Simulated node failure, raised mid-run by tests/launchers."""
+
+
+class FatalScanError(RuntimeError):
+    """A source/scanner error that retrying can never fix (auth failure,
+    object permanently gone, corrupt metadata).  Classified non-retryable by
+    :func:`default_is_retryable`, so it surfaces on the first attempt."""
 
 
 class StragglerAbort(RuntimeError):
@@ -50,18 +59,84 @@ class ShardRetry:
     error: str
 
 
-def run_with_retries(fn, *, retries: int, on_failure=None):
-    """Call ``fn()``; on exception retry up to ``retries`` more times, then
-    re-raise.  ``on_failure(attempt, exc)`` observes every failed attempt
-    (the sharded scanner logs a :class:`ShardRetry` there)."""
+# Programming errors: retrying re-runs the identical code on the identical
+# inputs, so these can only fail the same way again — burning retries on them
+# hides the traceback behind seconds of pointless backoff.
+_NON_RETRYABLE = (
+    TypeError,
+    ValueError,
+    KeyError,
+    IndexError,
+    AttributeError,
+    NotImplementedError,
+    AssertionError,
+)
+
+
+def default_is_retryable(exc: BaseException) -> bool:
+    """The retry classifier: transient I/O may heal, programming errors and
+    :class:`FatalScanError` never do.  ``ValueError`` covers plan/spec
+    construction AND data corruption (e.g. a truncated gzip stream) — both
+    deterministic, neither helped by a rescan of the same bytes."""
+    return not isinstance(exc, _NON_RETRYABLE + (FatalScanError,))
+
+
+@dataclasses.dataclass
+class BackoffPolicy:
+    """Jittered exponential backoff: attempt i waits
+    ``min(base_s * factor**i, max_s)`` scaled by a uniform jitter in
+    ``[1 - jitter, 1 + jitter]`` (decorrelates a fleet of shards hammering
+    the same recovering object store).  ``seed`` makes the jitter sequence
+    deterministic for tests."""
+
+    base_s: float = 0.05
+    factor: float = 2.0
+    max_s: float = 2.0
+    jitter: float = 0.5
+    seed: Optional[int] = None
+
+    def __post_init__(self):
+        if not (0.0 <= self.jitter <= 1.0):
+            raise ValueError("jitter must be in [0, 1]")
+        if self.base_s < 0 or self.factor < 1 or self.max_s < 0:
+            raise ValueError("backoff needs base_s/max_s >= 0, factor >= 1")
+        self._rng = random.Random(self.seed)
+
+    def delay_s(self, attempt: int) -> float:
+        d = min(self.base_s * self.factor ** attempt, self.max_s)
+        if self.jitter:
+            d *= 1.0 + self.jitter * (2.0 * self._rng.random() - 1.0)
+        return max(d, 0.0)
+
+
+def run_with_retries(
+    fn,
+    *,
+    retries: int,
+    on_failure=None,
+    is_retryable: Optional[Callable[[BaseException], bool]] = None,
+    backoff: Optional[BackoffPolicy] = None,
+    sleep=time.sleep,
+):
+    """Call ``fn()``; on a RETRYABLE exception retry up to ``retries`` more
+    times (waiting ``backoff.delay_s(attempt)`` between attempts when a
+    policy is given), then re-raise.  Non-retryable errors — programming
+    errors per :func:`default_is_retryable`, or whatever the ``is_retryable``
+    hook rejects — re-raise immediately: a TypeError from plan construction
+    must not burn the retry budget a flaky object store needs.
+    ``on_failure(attempt, exc)`` observes every failed attempt, fatal ones
+    included (the sharded scanner logs a :class:`ShardRetry` there)."""
+    classify = default_is_retryable if is_retryable is None else is_retryable
     for attempt in range(retries + 1):
         try:
             return fn()
         except Exception as exc:  # noqa: BLE001 - a shard may die any way it likes
             if on_failure is not None:
                 on_failure(attempt, exc)
-            if attempt == retries:
+            if attempt == retries or not classify(exc):
                 raise
+            if backoff is not None:
+                sleep(backoff.delay_s(attempt))
 
 
 class StepWatchdog:

@@ -100,6 +100,33 @@ def range_partition(
     return tuple((bounds[i], bounds[i + 1]) for i in range(n_shards))
 
 
+def merge_ranges(ranges) -> Tuple[Tuple[int, int], ...]:
+    """Sorted union of (start, stop) byte ranges: overlapping and adjacent
+    ranges coalesce, empty ranges drop.  The canonical form PartialScanResult
+    reports covered/missing coverage in (DESIGN.md §12)."""
+    out: list = []
+    for s, e in sorted((int(s), int(e)) for s, e in ranges):
+        if e <= s:
+            continue
+        if out and s <= out[-1][1]:
+            out[-1] = (out[-1][0], max(out[-1][1], e))
+        else:
+            out.append((s, e))
+    return tuple(out)
+
+
+def complement_ranges(ranges, total: int) -> Tuple[Tuple[int, int], ...]:
+    """[0, total) minus the given ranges (merged first)."""
+    out, pos = [], 0
+    for s, e in merge_ranges(ranges):
+        if s > pos:
+            out.append((pos, s))
+        pos = max(pos, e)
+    if pos < int(total):
+        out.append((pos, int(total)))
+    return tuple(out)
+
+
 @dataclasses.dataclass(frozen=True)
 class StreamShardSpec:
     """Range-partition plan for one logical stream scanned by many hosts.

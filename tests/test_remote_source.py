@@ -1,0 +1,195 @@
+"""RemoteRangeReader: the reference (start, stop) range source — parts,
+bounded prefetch, per-part timeout, classified retry with jittered
+exponential backoff — and FakeObjectStore, its in-process test double.
+DESIGN.md §12 is the contract."""
+
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from conftest import make_text
+
+from repro.core import engine
+from repro.core.remote_source import (
+    FakeObjectStore,
+    RangeReadTimeout,
+    RemoteRangeReader,
+)
+from repro.core.shard_stream import ShardedStreamScanner, source_total_bytes
+from repro.core.stream import StreamScanner
+from repro.dist.fault_injection import FaultPlan, InjectedReadError
+from repro.dist.fault_tolerance import BackoffPolicy, FatalScanError
+
+
+def _drain(it):
+    return np.concatenate([np.asarray(c) for c in it] or [np.zeros(0, np.uint8)])
+
+
+def test_reader_delivers_exact_bytes_in_parts(rng):
+    data = make_text(rng, 10_000, 7)
+    store = FakeObjectStore(data)
+    reader = store.reader(part_bytes=1024, prefetch=3)
+    got = _drain(reader(100, 7300))
+    np.testing.assert_array_equal(got, data[100:7300])
+    # ceil(7200 / 1024) parts, one GET each, no retries
+    assert reader.stats.parts == 8
+    assert reader.stats.gets == 8
+    assert reader.stats.bytes == 7200
+    assert reader.stats.retries == 0
+    # total_bytes picked up from the store: range partitioning just works
+    assert source_total_bytes(reader) == len(data)
+    # empty range is legal and empty
+    assert len(_drain(reader(50, 50))) == 0
+
+
+def test_reader_is_reopenable_and_bad_ranges_raise(rng):
+    data = make_text(rng, 4_000, 5)
+    reader = FakeObjectStore(data).reader(part_bytes=512)
+    a = _drain(reader(0, 2000))
+    b = _drain(reader(0, 2000))  # fresh iterator, same bytes
+    np.testing.assert_array_equal(a, b)
+    with pytest.raises(ValueError):
+        reader(100, 5000)  # past the end
+    with pytest.raises(ValueError):
+        reader(-1, 10)
+
+
+def test_transient_faults_retry_with_recorded_backoff(rng):
+    """Injected 5xx-style errors heal after attempts_per_fault failures; the
+    reader retries them with the exact (seeded) backoff schedule."""
+    data = make_text(rng, 8_192, 4)
+    plan = FaultPlan(3, read_error_rate=0.3, attempts_per_fault=1)
+    store = FakeObjectStore(data, plan=plan)
+    delays = []
+    reader = store.reader(
+        part_bytes=1024,
+        retries=3,
+        backoff=BackoffPolicy(base_s=0.01, jitter=0.5, seed=7),
+        sleep=delays.append,
+    )
+    got = _drain(reader(0, len(data)))
+    np.testing.assert_array_equal(got, data)
+    n_faults = len([e for e in plan.events if e.action == "read_error"])
+    assert n_faults > 0
+    assert reader.stats.retries == n_faults == len(delays)
+    # same schedule the policy would produce, verbatim
+    ref = BackoffPolicy(base_s=0.01, jitter=0.5, seed=7)
+    assert delays == pytest.approx([ref.delay_s(0) for _ in delays])
+
+
+def test_short_response_is_retryable_never_delivered(rng):
+    """A part answering the wrong number of bytes is retried, and the
+    consumer never sees the short payload."""
+    data = make_text(rng, 4_096, 4)
+    plan = FaultPlan(11, truncate_rate=0.4, attempts_per_fault=1)
+    store = FakeObjectStore(data, plan=plan)
+    reader = store.reader(part_bytes=512, retries=2)
+    got = _drain(reader(0, len(data)))
+    np.testing.assert_array_equal(got, data)
+    n_trunc = len([e for e in plan.events if e.action == "truncate"])
+    assert n_trunc > 0 and reader.stats.retries >= n_trunc
+
+
+def test_permanent_fault_exhausts_retries(rng):
+    data = make_text(rng, 2_048, 4)
+    plan = FaultPlan(5, read_error_rate=1.0, attempts_per_fault=None)
+    reader = FakeObjectStore(data, plan=plan).reader(
+        part_bytes=512, retries=2, sleep=lambda s: None
+    )
+    with pytest.raises(InjectedReadError):
+        _drain(reader(0, 1024))
+    assert reader.stats.retries == 2  # budget spent, then raised
+
+
+def test_fatal_errors_skip_the_retry_budget():
+    calls = []
+
+    def fetch(s, e):
+        calls.append((s, e))
+        raise FatalScanError("object gone")
+
+    fetch.total_bytes = 4096
+    reader = RemoteRangeReader(fetch, retries=5, part_bytes=1024)
+    with pytest.raises(FatalScanError):
+        _drain(reader(0, 1024))
+    assert len(calls) == 1  # classified non-retryable: one attempt, no backoff
+    assert reader.stats.retries == 0
+
+
+def test_timeout_abandons_the_attempt_and_retries():
+    """A part slower than timeout_s counts as a timeout and retries; the
+    abandoned call finishes on its worker thread without corrupting later
+    attempts."""
+    data = bytes(range(256)) * 16
+    slow_once = {"left": 1}
+    lock = threading.Lock()
+
+    def fetch(s, e):
+        with lock:
+            slow = slow_once["left"] > 0
+            slow_once["left"] -= 1
+        if slow:
+            time.sleep(0.25)
+        return data[s:e]
+
+    fetch.total_bytes = len(data)
+    reader = RemoteRangeReader(
+        fetch, part_bytes=1024, prefetch=1, timeout_s=0.05,
+        retries=2, sleep=lambda s: None,
+    )
+    got = _drain(reader(0, len(data)))
+    np.testing.assert_array_equal(got, np.frombuffer(data, np.uint8))
+    assert reader.stats.timeouts == 1
+    assert reader.stats.retries == 1
+
+
+def test_timeout_exhaustion_raises_range_read_timeout():
+    def fetch(s, e):
+        time.sleep(0.2)
+        return b"x" * (e - s)
+
+    fetch.total_bytes = 1024
+    reader = RemoteRangeReader(
+        fetch, part_bytes=1024, timeout_s=0.02, retries=1, sleep=lambda s: None
+    )
+    with pytest.raises(RangeReadTimeout):
+        _drain(reader(0, 1024))
+    assert reader.stats.timeouts == 2
+
+
+def test_prefetch_is_bounded(rng):
+    """No more than `prefetch` parts run ahead of the consumer: after the
+    first piece arrives, at most 1 + prefetch GETs have been issued."""
+    data = make_text(rng, 8_192, 4)
+    store = FakeObjectStore(data)
+    reader = store.reader(part_bytes=1024, prefetch=2)
+    it = reader(0, len(data))
+    next(it)
+    # parts are submitted before blocking on the head: bound is prefetch
+    # in flight at once (the delivered part freed one slot)
+    assert store.gets <= 3
+    _drain(it)
+    assert store.gets == 8
+
+
+def test_sharded_scan_over_remote_reader_is_exact(rng):
+    """End to end: ShardedStreamScanner over the remote protocol, with
+    transient faults in the store, equals the local scan bit-for-bit."""
+    text = make_text(rng, 60_000, 4)
+    pats = [text[37:45].copy(), text[1003:1007].copy(), b"zz"]
+    plans = engine.compile_patterns(pats)
+    want = StreamScanner(plans, 4096).count_many(text)
+    want_pos = StreamScanner(plans, 4096).positions_many(text)
+
+    plan = FaultPlan(2, read_error_rate=0.1, truncate_rate=0.1, attempts_per_fault=1)
+    store = FakeObjectStore(text, plan=plan)
+    reader = store.reader(part_bytes=4096, retries=3, sleep=lambda s: None)
+    sc = ShardedStreamScanner(plans, 4, 4096, max_retries=2)
+    np.testing.assert_array_equal(sc.count_many(reader), want)
+    got_pos = ShardedStreamScanner(plans, 4, 4096, max_retries=2).positions_many(
+        store.reader(part_bytes=4096, retries=3, sleep=lambda s: None)
+    )
+    for a, b in zip(got_pos, want_pos):
+        np.testing.assert_array_equal(a, b)

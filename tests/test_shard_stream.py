@@ -221,6 +221,45 @@ def test_fault_injection_retry_and_exhaustion(rng):
     assert len(sc2.events) == 3  # every attempt logged, then re-raised
 
 
+def test_fatal_errors_bypass_the_shard_retry_budget(rng):
+    """Non-retryable errors (programming errors, FatalScanError) surface on
+    the FIRST attempt — no pointless re-open-and-rescan of a shard that
+    fails deterministically.  A custom is_retryable hook overrides."""
+    from repro.dist.fault_tolerance import FatalScanError
+
+    text = make_text(rng, 16_000, 4)
+    plans = engine.compile_patterns([text[70:78].copy()])
+    want = StreamScanner(plans, 2048).count_many(text)
+
+    for exc in (FatalScanError("object gone"), TypeError("bad plan")):
+        calls = {"n": 0}
+
+        def fatal(start, stop, _exc=exc):
+            calls["n"] += 1
+            raise _exc
+
+        sc = ShardedStreamScanner(plans, 2, 2048, max_retries=5)
+        with pytest.raises(type(exc)):
+            sc.count_many(fatal, total_bytes=len(text))
+        assert calls["n"] == 1  # first attempt only
+        assert len(sc.events) == 1  # still logged for the postmortem
+
+    heal = {"n": 0}
+
+    def flaky_value(start, stop):
+        heal["n"] += 1
+        if heal["n"] == 1:
+            raise ValueError("transiently malformed")
+        return text[start:stop]
+
+    sc = ShardedStreamScanner(
+        plans, 2, 2048, max_retries=2,
+        is_retryable=lambda e: isinstance(e, ValueError),
+    )
+    got = sc.count_many(flaky_value, total_bytes=len(text))
+    assert got.tolist() == want.tolist()
+
+
 def test_short_range_read_is_loud_not_an_undercount(rng):
     """A source that delivers fewer bytes than a shard's range (truncated
     file, misbehaving range callable) must raise — transiently short reads

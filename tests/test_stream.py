@@ -432,3 +432,97 @@ def test_stop_scanner_lazy_sync_identical(rng, monkeypatch):
     assert sc.dispatch_count == len(stream)
     assert len(transfers) == len(hit_steps)  # matrix synced only on hits
     assert len(hit_steps) > 0  # the gate was actually exercised both ways
+
+
+def test_compressed_sources_under_injected_faults(rng):
+    """The fault harness x compression matrix: a truncation that cuts a
+    gzip/zstd frame mid-member surfaces as the decompressor's truncated-
+    stream ValueError, an injected read error surfaces as-is, and a
+    zero-rate plan is a clean pass-through — never a silent short count."""
+    from repro.dist.fault_injection import FaultPlan, FaultyChunkSource, InjectedReadError
+
+    text = make_text(rng, 30_000, 4)
+    plans = engine.compile_patterns([text[100:108].copy(), text[5:7].copy()])
+    want = StreamScanner(plans, 1024).count_many(text)
+
+    blobs = {"gzip": gzip.compress(text.tobytes())}
+    try:
+        import zstandard
+
+        blobs["zstd"] = zstandard.ZstdCompressor().compress(text.tobytes())
+    except ImportError:
+        pass
+
+    for codec, blob in blobs.items():
+        # single member: every proper prefix is a truncated stream
+        pieces = [blob[i : i + 1000] for i in range(0, len(blob), 1000)]
+
+        clean = FaultPlan(0)  # all rates zero: the wrapper is transparent
+        got = StreamScanner(plans, 1024).count_many(
+            Compressed(FaultyChunkSource(iter(pieces), clean), codec=codec)
+        )
+        np.testing.assert_array_equal(got, want, err_msg=codec)
+
+        trunc = FaultPlan(1, truncate_rate=1.0, attempts_per_fault=None)
+        with pytest.raises(ValueError, match="truncated"):
+            StreamScanner(plans, 1024).count_many(
+                Compressed(FaultyChunkSource(iter(pieces), trunc), codec=codec)
+            )
+        assert any(e.action == "truncate" for e in trunc.events)
+
+        # mid-member read error: make the SECOND piece fail so decompression
+        # is already underway when the fault lands
+        err = FaultPlan(2, read_error_rate=1.0, attempts_per_fault=1)
+        with pytest.raises(InjectedReadError):
+            err.check("read", ("stream", 0))  # burn piece 0's transient fault
+        with pytest.raises(InjectedReadError):
+            StreamScanner(plans, 1024).count_many(
+                Compressed(FaultyChunkSource(iter(pieces), err), codec=codec)
+            )
+
+        # truncated compressed data is NOT retryable: rescanning the same
+        # bytes can't help, so the classifier must fail fast
+        from repro.dist.fault_tolerance import default_is_retryable
+
+        assert not default_is_retryable(ValueError(f"truncated {codec} stream"))
+        assert default_is_retryable(InjectedReadError("flaky socket"))
+
+
+def test_stream_watchdog_flags_stalled_chunk(rng):
+    """StreamScanner(watchdog=...) times each host step; a source that
+    stalls mid-stream raises StragglerAbort under policy="raise", and under
+    policy="log" the scan completes exactly with the event reported to
+    on_straggler."""
+    import time as _time
+
+    from repro.dist.fault_tolerance import StepWatchdog, StragglerAbort
+
+    text = make_text(rng, 40_000, 4)
+    plans = engine.compile_patterns([text[100:108].copy()])
+    want = StreamScanner(plans, 1024).count_many(text)
+
+    def stalling_chunks(stall_s):
+        def gen():
+            for i in range(0, len(text), 1024):
+                if i == 20_480:  # enough history for the rolling median
+                    _time.sleep(stall_s)
+                yield text[i : i + 1024]
+
+        return gen()
+
+    wd = StepWatchdog(factor=5.0, policy="raise", min_history=3)
+    with pytest.raises(StragglerAbort):
+        StreamScanner(plans, 1024, watchdog=wd).count_many(stalling_chunks(0.25))
+
+    seen = []
+    wd2 = StepWatchdog(factor=5.0, policy="log", min_history=3)
+    got = StreamScanner(
+        plans, 1024, watchdog=wd2, on_straggler=seen.append
+    ).count_many(stalling_chunks(0.25))
+    np.testing.assert_array_equal(got, want)  # logging never changes the scan
+    assert seen and seen[0].duration_s > seen[0].median_s
+    assert wd2.events == seen
+
+    # no watchdog, no timing: the plain path is untouched
+    got_plain = StreamScanner(plans, 1024).count_many(stalling_chunks(0.0))
+    np.testing.assert_array_equal(got_plain, want)

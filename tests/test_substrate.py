@@ -127,6 +127,88 @@ def test_watchdog_detects_straggler():
     assert wd.events and wd.events[0].step == 6
 
 
+def test_run_with_retries_classifies_errors():
+    """Transient I/O retries up to the budget; programming errors and
+    FatalScanError re-raise on the FIRST attempt — a TypeError from plan
+    construction must not burn retries behind backoff."""
+    from repro.dist.fault_tolerance import (
+        FatalScanError,
+        run_with_retries,
+    )
+
+    calls = {"n": 0}
+
+    def flaky():
+        calls["n"] += 1
+        if calls["n"] < 3:
+            raise IOError("transient")
+        return "ok"
+
+    seen = []
+    assert (
+        run_with_retries(flaky, retries=5, on_failure=lambda a, e: seen.append(a))
+        == "ok"
+    )
+    assert calls["n"] == 3 and seen == [0, 1]
+
+    for exc_type in (TypeError, ValueError, KeyError, FatalScanError):
+        calls = {"n": 0}
+
+        def fatal():
+            calls["n"] += 1
+            raise exc_type("bad plan")
+
+        with pytest.raises(exc_type):
+            run_with_retries(fatal, retries=5)
+        assert calls["n"] == 1  # no retry budget burned
+
+    # a custom classifier overrides the default
+    calls = {"n": 0}
+
+    def vflaky():
+        calls["n"] += 1
+        if calls["n"] < 2:
+            raise ValueError("transiently malformed")
+        return "ok"
+
+    assert (
+        run_with_retries(
+            vflaky, retries=3, is_retryable=lambda e: isinstance(e, ValueError)
+        )
+        == "ok"
+    )
+    assert calls["n"] == 2
+
+
+def test_run_with_retries_backoff_schedule():
+    """Delays follow the jittered exponential policy exactly (seeded), cap
+    at max_s, and the final failing attempt sleeps nothing."""
+    from repro.dist.fault_tolerance import BackoffPolicy, run_with_retries
+
+    delays = []
+
+    def always():
+        raise IOError("down")
+
+    with pytest.raises(IOError):
+        run_with_retries(
+            always,
+            retries=4,
+            backoff=BackoffPolicy(base_s=0.1, factor=2.0, max_s=0.3, jitter=0.5, seed=3),
+            sleep=delays.append,
+        )
+    assert len(delays) == 4  # one per retried attempt, none after the last
+    ref = BackoffPolicy(base_s=0.1, factor=2.0, max_s=0.3, jitter=0.5, seed=3)
+    assert delays == pytest.approx([ref.delay_s(a) for a in range(4)])
+    # jitterless policy is the pure exponential with a cap
+    flat = BackoffPolicy(base_s=0.1, factor=2.0, max_s=0.3, jitter=0.0)
+    assert [flat.delay_s(a) for a in range(4)] == pytest.approx(
+        [0.1, 0.2, 0.3, 0.3]
+    )
+    with pytest.raises(ValueError):
+        BackoffPolicy(jitter=2.0)
+
+
 def test_gradient_compression_accuracy():
     """int8+EF quantized psum ~= exact psum, and EF kills the bias over steps."""
     from jax.sharding import PartitionSpec as P
