@@ -42,6 +42,7 @@ FILE_EXTRAS = {
                             "speedup_vs_pergroup": (int, float)},
     "BENCH_faults.json": {"shards": int, "fault_rate": (int, float),
                           "ratio_vs_clean": (int, float)},
+    "BENCH_obs.json": {},      # two row families; shared keys only
 }
 # BENCH_paper_tables.json is a dict, not a row list: validated separately.
 PAPER_JSON = "BENCH_paper_tables.json"

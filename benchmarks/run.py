@@ -19,12 +19,34 @@ def _emit(name: str, us: float, derived: str = ""):
     print(f"{name},{us:.1f},{derived}")
 
 
-def timeit_median(fn, *args, reps: int = 7) -> float:
+# label -> warmup (first-call) duration in ms, drained into each bench's
+# BENCH json meta as "compile_ms".  The warmup call pays jit tracing +
+# compilation; timing it separately keeps compile time OUT of the GB/s rows
+# (previously visible as noisy first rows on cold caches) while still
+# recording it.
+_COMPILE_MS: dict = {}
+
+
+def drain_compile_ms() -> dict:
+    """The warmup durations recorded since the last drain (label -> ms,
+    sorted), cleared — each bench calls this once when writing its meta."""
+    out = {k: round(_COMPILE_MS[k], 1) for k in sorted(_COMPILE_MS)}
+    _COMPILE_MS.clear()
+    return out
+
+
+def timeit_median(fn, *args, reps: int = 7, label: str = None) -> float:
     """Median wall-time of fn(*args) after one warmup call, blocking on the
-    result each rep (the ONE timing helper every bench below uses)."""
+    result each rep (the ONE timing helper every bench below uses).  The
+    warmup call — where jit compilation lands — is timed separately and
+    recorded under ``label`` for :func:`drain_compile_ms`; it is never part
+    of the returned median."""
     import jax
 
+    t0 = time.perf_counter()
     jax.block_until_ready(fn(*args))
+    if label is not None:
+        _COMPILE_MS[label] = (time.perf_counter() - t0) * 1e3
     ts = []
     for _ in range(reps):
         t0 = time.perf_counter()
@@ -134,8 +156,9 @@ def bench_multipattern(size: int, outdir: Path):
         assert np.array_equal(
             np.asarray(f_eng(tj))[0], np.asarray(f_vmap(tj, pj))
         ), "engine/vmap count divergence"
-        dt_v = timeit_median(f_vmap, tj, pj)
-        dt_e = timeit_median(f_eng, tj)
+        dt_v = timeit_median(f_vmap, tj, pj,
+                             label=f"multipattern/vmap_baseline/p{npat}")
+        dt_e = timeit_median(f_eng, tj, label=f"multipattern/engine/p{npat}")
         for name, dt, speedup in (
             (f"multipattern/vmap_baseline/p{npat}", dt_v, 1.0),
             (f"multipattern/engine/p{npat}", dt_e, dt_v / dt_e),
@@ -155,7 +178,10 @@ def bench_multipattern(size: int, outdir: Path):
                   f"GBps_eff={size*npat/dt/1e9:.3f};speedup={speedup:.2f}x")
     # experiments/benchmarks/ is the ONE canonical location for bench
     # artifacts (the repo-root copy this used to also write is gone)
-    (outdir / "BENCH_multipattern.json").write_text(json.dumps(rows, indent=1))
+    (outdir / "BENCH_multipattern.json").write_text(
+        json.dumps({"meta": {"compile_ms": drain_compile_ms()}, "rows": rows},
+                   indent=1)
+    )
 
 
 def bench_approx(size: int, outdir: Path):
@@ -190,7 +216,7 @@ def bench_approx(size: int, outdir: Path):
             want = int(kmismatch_naive(text, pats[0], k).sum())
             got = int(np.asarray(f(tj))[0, 0])
             assert got == want, f"approx/naive divergence m={m} k={k}"
-            dt = timeit_median(f, tj)
+            dt = timeit_median(f, tj, label=f"approx/m{m}/k{k}")
             if k == 0:
                 dt_exact = dt
             ratio = dt / dt_exact
@@ -209,7 +235,10 @@ def bench_approx(size: int, outdir: Path):
             })
             _emit(f"approx/m{m}/k{k}", dt * 1e6,
                   f"GBps={size/dt/1e9:.3f};vs_exact={ratio:.2f}x")
-    (outdir / "BENCH_approx.json").write_text(json.dumps(rows, indent=1))
+    (outdir / "BENCH_approx.json").write_text(
+        json.dumps({"meta": {"compile_ms": drain_compile_ms()}, "rows": rows},
+                   indent=1)
+    )
 
 
 def bench_stream(outdir: Path):
@@ -265,8 +294,10 @@ def bench_stream(outdir: Path):
         assert np.array_equal(streamed(), np.asarray(resident())[0]), (
             f"stream/resident divergence at {mb} MB"
         )
-        dt_r = timeit_median(resident, reps=3)
-        dt_s = timeit_median(streamed, reps=3)
+        dt_r = timeit_median(resident, reps=3,
+                             label=f"stream/resident/{mb}mb")
+        dt_s = timeit_median(streamed, reps=3,
+                             label=f"stream/scanner/{mb}mb")
         res_dev = int(9.5 * size)  # text + packed + block_fp + fp temporary
         for name, dt, dev in (
             (f"stream/resident/{mb}mb", dt_r, res_dev),
@@ -302,8 +333,13 @@ def bench_stream(outdir: Path):
     got = np.asarray(f_shared(idx))[0]
     want = np.concatenate([np.asarray(f(idx))[0] for f in f_per])
     assert np.array_equal(got, want), "shared/per-group count divergence"
-    dt_shared = timeit_median(f_shared, idx, reps=5)
-    dt_per = sum(timeit_median(f, idx, reps=5) for f in f_per)
+    dt_shared = timeit_median(f_shared, idx, reps=5,
+                              label="stream/fp_shared/3groups")
+    dt_per = sum(
+        timeit_median(f, idx, reps=5,
+                      label=f"stream/fp_pergroup_baseline/3groups/g{gi}")
+        for gi, f in enumerate(f_per)
+    )
     for name, dt in (
         ("stream/fp_pergroup_baseline/3groups", dt_per),
         ("stream/fp_shared/3groups", dt_shared),
@@ -319,7 +355,10 @@ def bench_stream(outdir: Path):
         })
         _emit(name, dt * 1e6,
               f"GBps={size/dt/1e9:.3f};vs_pergroup={dt_per/dt:.2f}x")
-    (outdir / "BENCH_stream.json").write_text(json.dumps(rows, indent=1))
+    (outdir / "BENCH_stream.json").write_text(
+        json.dumps({"meta": {"compile_ms": drain_compile_ms()}, "rows": rows},
+                   indent=1)
+    )
 
 
 def bench_megascan(outdir: Path):
@@ -384,11 +423,15 @@ def bench_megascan(outdir: Path):
                     f"fused/per-group divergence mb={mb} g={g} k={k}"
                 )
                 dt_f = timeit_median(
-                    lambda s=fused_sc: s.count_many(text), reps=3
+                    lambda s=fused_sc: s.count_many(text), reps=3,
+                    label=f"megascan/fused/{mb}mb/g{g}/k{k}",
                 )
                 dt_p = sum(
-                    timeit_median(lambda s=s: s.count_many(text), reps=3)
-                    for s in per_scs
+                    timeit_median(
+                        lambda s=s: s.count_many(text), reps=3,
+                        label=f"megascan/pergroup/{mb}mb/g{g}/k{k}/{gi}",
+                    )
+                    for gi, s in enumerate(per_scs)
                 )
                 for name, dt, speedup in (
                     (f"megascan/pergroup_baseline/{mb}mb/g{g}/k{k}", dt_p, 1.0),
@@ -415,6 +458,7 @@ def bench_megascan(outdir: Path):
         "fused": "one StreamScanner: single dispatch per chunk, all groups, "
                  "seam folded in (megakernel executable proxy; kernel pinned "
                  "bit-identical by tests/test_megascan.py)",
+        "compile_ms": drain_compile_ms(),
     }
     (outdir / "BENCH_megascan.json").write_text(
         json.dumps({"meta": meta, "rows": rows}, indent=1)
@@ -450,7 +494,7 @@ def _bench_shard_child(outpath: str):
     def run_base():
         return StreamScanner(plans, chunk).count_many(text)
 
-    dt_1 = timeit_median(run_base, reps=3)
+    dt_1 = timeit_median(run_base, reps=3, label="shard/stream_baseline/64mb")
     rows = [{
         "name": "shard/stream_baseline/64mb",
         "us_per_call": dt_1 * 1e6,
@@ -469,7 +513,7 @@ def _bench_shard_child(outpath: str):
         def run_sharded(S=S):
             return ShardedStreamScanner(plans, S, chunk).count_many(text)
 
-        dt = timeit_median(run_sharded, reps=3)
+        dt = timeit_median(run_sharded, reps=3, label=f"shard/sharded_{S}/64mb")
         rows.append({
             "name": f"shard/sharded_{S}/64mb",
             "us_per_call": dt * 1e6,
@@ -487,6 +531,7 @@ def _bench_shard_child(outpath: str):
         "forced_devices": ndev,
         "baseline": "fused StreamScanner (one dispatch per chunk, "
                     "count_many end_min seam)",
+        "compile_ms": drain_compile_ms(),
     }
     Path(outpath).write_text(json.dumps({"meta": meta, "rows": rows}, indent=1))
 
@@ -593,7 +638,8 @@ def _bench_faults_child(outpath: str):
         observed[name] = {"retries": len(sc.events), "steals": len(sc.steal_events)}
 
     times = {
-        name: timeit_median(lambda s=steal, f=faulty: run(s, f)[0], reps=3)
+        name: timeit_median(lambda s=steal, f=faulty: run(s, f)[0], reps=3,
+                            label=name)
         for name, steal, faulty in configs
     }
     dt_clean = times["faults/static_clean/16mb"]
@@ -624,6 +670,7 @@ def _bench_faults_child(outpath: str):
                        "(attempts_per_fault=1), zero-delay backoff",
         "baseline": "static_clean (no faults, no stealing); ratio_vs_clean "
                     "= its wall-time / this row's",
+        "compile_ms": drain_compile_ms(),
     }
     Path(outpath).write_text(json.dumps({"meta": meta, "rows": rows}, indent=1))
 
@@ -662,6 +709,170 @@ def bench_faults(outdir: Path):
         _emit(row["name"], row["us_per_call"],
               f"GBps={row['GBps']:.3f};fault_rate={row['fault_rate']};"
               f"vs_clean={row['ratio_vs_clean']:.2f}x")
+
+
+def _bench_obs_child(outpath: str):
+    """Runs INSIDE the 8-forced-host-device subprocess bench_obs spawns.
+
+    Two row families (BENCH_obs.json):
+
+      * obs/{none,disabled,traced}/<MB>mb — streaming scan throughput at
+        16/64 MB with (none) the module-default recorder, (disabled) an
+        explicitly attached ``Recorder(enabled=False)``, and (traced) a full
+        tracing recorder with fenced dispatches.  The scan code calls the
+        recorder unconditionally — no ``if tracing:`` forks — so
+        none vs disabled measures the cost of that design: the acceptance
+        budget is disabled overhead_pct < 2 at 64 MB.  traced pays fencing
+        (per-dispatch sync, pipeline serialized) — the honest cost of
+        attribution, reported, not hidden.
+
+      * obs/shard_split/s{S}/64mb — ONE traced ``ShardedStreamScanner`` run
+        per shard count S in {1, 2, 4, 8}: the recorder's span totals give
+        the first honest host_prep vs device_put vs dispatch wall-time
+        split.  On this 1-core/8-forced-device box host_prep + dispatch
+        both burn the same physical core regardless of S — the measured
+        explanation for BENCH_shard.json's flat ~1.0x curve.
+
+    The S=8 run's Perfetto trace is exported next to the JSON
+    (obs_shard8_trace.json) and schema-checked by
+    benchmarks/validate_trace.py before it is written."""
+    import json
+    import os
+
+    import jax
+
+    from benchmarks.validate_trace import validate_trace
+    from repro.core import engine as eng
+    from repro.core.shard_stream import ShardedStreamScanner
+    from repro.core.stream import StreamScanner
+    from repro.data import corpus
+    from repro.obs import Recorder
+
+    chunk = 1 << 22
+    ndev = len(jax.devices())
+    rows = []
+
+    texts = {}
+    for mb in (16, 64):
+        size = mb * 1_000_000
+        texts[mb] = corpus.make_corpus("genome", size, seed=0)
+    pats = [texts[64][i * 1009 : i * 1009 + 8].copy() for i in range(8)]
+    plans = eng.compile_patterns(list(pats))
+
+    def scan(mb, recorder):
+        sc = StreamScanner(plans, chunk, recorder=recorder)
+        return sc.count_many(texts[mb])
+
+    modes = {
+        "none": lambda: None,
+        "disabled": lambda: Recorder(enabled=False, fence=False),
+        "traced": lambda: Recorder(enabled=True, fence=True),
+    }
+    for mb in (16, 64):
+        size = mb * 1_000_000
+        base = None
+        for mode, make in modes.items():
+            reps = 5 if mb == 64 and mode != "traced" else 3
+            dt = timeit_median(
+                lambda mb=mb, make=make: scan(mb, make()), reps=reps,
+                label=f"obs/{mode}/{mb}mb",
+            )
+            if mode == "none":
+                base = dt
+            overhead = (dt / base - 1.0) * 100.0
+            rows.append({
+                "name": f"obs/{mode}/{mb}mb",
+                "us_per_call": dt * 1e6,
+                "GBps": size / dt / 1e9,
+                "size_bytes": size,
+                "chunk_bytes": chunk,
+                "overhead_pct_vs_none": round(overhead, 2),
+            })
+            _emit(f"obs/{mode}/{mb}mb", dt * 1e6,
+                  f"GBps={size/dt/1e9:.3f};overhead={overhead:+.2f}%")
+
+    # -- host_prep vs dispatch split per shard count -------------------------
+    size = 64_000_000
+    text = texts[64]
+    for S in (1, 2, 4, 8):
+        # warm every device's compile cache outside the traced run
+        warm = ShardedStreamScanner(plans, S, chunk)
+        warm.count_many(text)
+        rec = Recorder(enabled=True, fence=True)
+        sc = ShardedStreamScanner(plans, S, chunk, recorder=rec)
+        t0 = time.perf_counter()
+        sc.count_many(text)
+        dt = time.perf_counter() - t0
+        split = rec.span_totals_ms()
+        rows.append({
+            "name": f"obs/shard_split/s{S}/64mb",
+            "us_per_call": dt * 1e6,
+            "GBps": size / dt / 1e9,
+            "size_bytes": size,
+            "chunk_bytes": chunk,
+            "shards": S,
+            "devices": ndev,
+            "host_prep_ms": round(split.get("host_prep", 0.0), 1),
+            "device_put_ms": round(split.get("device_put", 0.0), 1),
+            "dispatch_ms": round(split.get("dispatch", 0.0), 1),
+        })
+        _emit(f"obs/shard_split/s{S}/64mb", dt * 1e6,
+              f"host_prep={split.get('host_prep', 0.0):.0f}ms;"
+              f"dispatch={split.get('dispatch', 0.0):.0f}ms")
+        if S == 8:
+            trace = rec.trace_json()
+            validate_trace(trace)  # schema gate before the artifact lands
+            (Path(outpath).parent / "obs_shard8_trace.json").write_text(
+                json.dumps(trace, indent=1)
+            )
+    meta = {
+        "host_cores": os.cpu_count(),
+        "forced_devices": ndev,
+        "none": "StreamScanner default: module-level disabled recorder "
+                "(logging sink only) — the unconditional-call baseline",
+        "disabled": "explicit Recorder(enabled=False): no spans, no "
+                    "fencing; acceptance budget overhead_pct_vs_none < 2 "
+                    "at 64 MB",
+        "traced": "Recorder(enabled=True, fence=True): spans + per-dispatch "
+                  "block_until_ready — attribution cost, deliberately paid",
+        "compile_ms": drain_compile_ms(),
+    }
+    Path(outpath).write_text(json.dumps({"meta": meta, "rows": rows}, indent=1))
+
+
+def bench_obs(outdir: Path):
+    """Telemetry overhead + time-split bench (BENCH_obs.json): no-recorder
+    vs disabled-recorder vs full-tracing throughput, and the per-shard
+    host_prep/device_put/dispatch wall-time split, in a subprocess with
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 (same reasoning as
+    bench_shard: device count locks at first jax init)."""
+    import json
+    import os
+    import subprocess
+    import sys
+
+    out = outdir / "BENCH_obs.json"
+    env = {
+        **os.environ,
+        "XLA_FLAGS": "--xla_force_host_platform_device_count=8",
+        "JAX_PLATFORMS": "cpu",
+        "PYTHONPATH": "src" + os.pathsep + os.environ.get("PYTHONPATH", ""),
+    }
+    res = subprocess.run(
+        [
+            sys.executable, "-c",
+            "import sys; sys.path.insert(0, '.'); "
+            "from benchmarks.run import _bench_obs_child; "
+            "_bench_obs_child(sys.argv[1])",
+            str(out),
+        ],
+        env=env,
+        timeout=3600,
+    )
+    if res.returncode != 0:
+        raise RuntimeError("bench_obs subprocess failed")
+    for row in json.loads(out.read_text())["rows"]:
+        _emit(row["name"], row["us_per_call"], f"GBps={row['GBps']:.3f}")
 
 
 def bench_pipeline(outdir: Path):
@@ -719,6 +930,7 @@ def main():
         "megascan": lambda: bench_megascan(outdir),
         "shard": lambda: bench_shard(outdir),
         "faults": lambda: bench_faults(outdir),
+        "obs": lambda: bench_obs(outdir),
         "pipeline": lambda: bench_pipeline(outdir),
         "roofline": lambda: bench_roofline_report(outdir),
     }

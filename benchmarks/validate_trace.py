@@ -1,0 +1,144 @@
+"""Schema validator for the Chrome/Perfetto traces repro.obs exports.
+
+Stdlib-only (CI runs it straight after a fault-seeded scan, before the
+trace is uploaded as an artifact).  Validates the contract DESIGN.md §13
+promises, not just "is JSON":
+
+  * top level is {"traceEvents": [...], "displayTimeUnit": "ms"};
+  * every event has the common fields (name, ph, pid, tid) with the right
+    types; "X" complete events carry numeric ts and dur >= 0; "i" instant
+    events carry ts and scope "t"; "M" metadata events are thread_name
+    declarations whose args name every tid used by real events;
+  * per (pid, tid) lane, "X" spans are PROPERLY NESTED: sorted by
+    (ts, -dur), each span either starts after the enclosing span ends or
+    lies entirely inside it — overlap without containment is a recording
+    bug (a span closed on the wrong lane).  ts/dur are rounded to 3
+    decimals (0.001 us) on export, so containment is checked with a half-ulp
+    epsilon;
+  * structured args invariants: steal/shed/range_done/range_lost events
+    carry int start < stop byte ranges; retry events carry an int attempt.
+
+Usage:  python benchmarks/validate_trace.py TRACE.json [TRACE2.json ...]
+prints "TRACE.json: OK (N events)" per file or raises TraceSchemaError.
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+from typing import List
+
+# ts/dur are exported rounded to 3 decimal us; two rounded endpoints can
+# each be off by half an ulp, so containment tolerates their sum.
+EPS_US = 0.0011
+
+RANGED_EVENTS = {"steal", "shed", "range_done", "range_lost"}
+
+
+class TraceSchemaError(ValueError):
+    """The trace violates the repro.obs export schema."""
+
+
+def _fail(msg: str, i=None):
+    where = "" if i is None else f" (event #{i})"
+    raise TraceSchemaError(msg + where)
+
+
+def _check_common(ev: dict, i: int):
+    if not isinstance(ev, dict):
+        _fail("event is not an object", i)
+    for field, typ in (("name", str), ("ph", str), ("pid", int), ("tid", int)):
+        if not isinstance(ev.get(field), typ):
+            _fail(f"missing or mistyped {field!r}", i)
+    args = ev.get("args")
+    if args is not None and not isinstance(args, dict):
+        _fail("args must be an object when present", i)
+
+
+def _check_args(ev: dict, i: int):
+    args = ev.get("args") or {}
+    name = ev["name"]
+    if name in RANGED_EVENTS:
+        s, e = args.get("start"), args.get("stop")
+        if not (isinstance(s, int) and isinstance(e, int) and s < e):
+            _fail(f"{name!r} needs int args start < stop, got {args!r}", i)
+    if name == "retry" and not isinstance(args.get("attempt"), int):
+        _fail(f"'retry' needs int args.attempt, got {args!r}", i)
+
+
+def _check_nesting(lane: tuple, spans: List[dict]):
+    """spans: this lane's X events.  Sorted by (ts, -dur) a legal lane is a
+    stack walk — each next span is either inside the top of the stack or
+    after it; a partial overlap means a span leaked across lanes."""
+    spans = sorted(spans, key=lambda e: (e["ts"], -e["dur"]))
+    stack: List[tuple] = []  # (end_us, name)
+    for ev in spans:
+        t0, t1 = ev["ts"], ev["ts"] + ev["dur"]
+        while stack and t0 >= stack[-1][0] - EPS_US:
+            stack.pop()
+        if stack and t1 > stack[-1][0] + EPS_US:
+            _fail(
+                f"lane {lane}: span {ev['name']!r} [{t0}, {t1}] overlaps "
+                f"but is not nested in {stack[-1][1]!r} (ends {stack[-1][0]})"
+            )
+        stack.append((t1, ev["name"]))
+
+
+def validate_trace(trace: dict) -> int:
+    """Raise TraceSchemaError on violation; return the event count."""
+    if not isinstance(trace, dict):
+        _fail("trace must be a JSON object")
+    if trace.get("displayTimeUnit") != "ms":
+        _fail("displayTimeUnit must be 'ms'")
+    events = trace.get("traceEvents")
+    if not isinstance(events, list) or not events:
+        _fail("traceEvents must be a non-empty list")
+
+    named_tids = set()
+    used_tids = set()
+    by_lane: dict = {}
+    for i, ev in enumerate(events):
+        _check_common(ev, i)
+        ph = ev["ph"]
+        if ph == "M":
+            if ev["name"] != "thread_name":
+                _fail(f"unexpected metadata event {ev['name']!r}", i)
+            if not isinstance((ev.get("args") or {}).get("name"), str):
+                _fail("thread_name metadata needs args.name", i)
+            named_tids.add((ev["pid"], ev["tid"]))
+            continue
+        if ph not in ("X", "i"):
+            _fail(f"unexpected phase {ph!r}", i)
+        if not isinstance(ev.get("ts"), (int, float)) or ev["ts"] < 0:
+            _fail("ts must be a non-negative number", i)
+        used_tids.add((ev["pid"], ev["tid"]))
+        if ph == "X":
+            if not isinstance(ev.get("dur"), (int, float)) or ev["dur"] < 0:
+                _fail("X event needs numeric dur >= 0", i)
+            by_lane.setdefault((ev["pid"], ev["tid"]), []).append(ev)
+        else:
+            if ev.get("s") != "t":
+                _fail("instant event needs scope 's': 't'", i)
+            _check_args(ev, i)
+
+    missing = used_tids - named_tids
+    if missing:
+        _fail(f"tids without thread_name metadata: {sorted(missing)}")
+    for lane, spans in sorted(by_lane.items()):
+        _check_nesting(lane, spans)
+    return len(events)
+
+
+def main(argv: List[str]) -> int:
+    if not argv:
+        print(__doc__.strip().splitlines()[-2].strip())
+        return 2
+    for path in argv:
+        with open(path) as f:
+            n = validate_trace(json.load(f))
+        print(f"{path}: OK ({n} events)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

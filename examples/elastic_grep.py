@@ -2,6 +2,7 @@
 
     PYTHONPATH=src python examples/elastic_grep.py [--size 8000000]
         [--shards 0] [--chunk 4194304] [--fault-rate 0.05] [--seed 0]
+        [--trace TRACE.json]
 
 The whole elastic fabric in one run: the corpus lives behind a
 FakeObjectStore (a range-GET "RPC" with injected faults), a
@@ -16,7 +17,11 @@ with on_exhausted="partial" returns a PartialScanResult naming exactly
 which byte ranges were lost instead of raising.
 
 Run under XLA_FLAGS=--xla_force_host_platform_device_count=8 (the CI chaos
-job does) to see the lanes spread over devices.
+job does) to see the lanes spread over devices.  With --trace PATH the run
+attaches a flight recorder (repro.obs, DESIGN.md §13) and exports a
+Chrome/Perfetto trace: per-lane span tracks, one retry event per injected
+fault, every steal/shed with its exact byte range — open it in
+https://ui.perfetto.dev.
 """
 
 from __future__ import annotations
@@ -46,6 +51,8 @@ def main():
     ap.add_argument("--shards", type=int, default=0, help="0 = one per device")
     ap.add_argument("--fault-rate", type=float, default=0.05)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--trace", type=str, default=None,
+                    help="export a Perfetto trace of the faulty scan here")
     args = ap.parse_args()
 
     import jax
@@ -56,6 +63,7 @@ def main():
     from repro.core.stream import StreamScanner
     from repro.dist.fault_injection import FaultPlan
     from repro.dist.fault_tolerance import BackoffPolicy
+    from repro.obs import Recorder
 
     queries = make_queries()
     plans = engine.compile_patterns(queries)
@@ -83,13 +91,15 @@ def main():
         args.seed, read_error_rate=r, truncate_rate=r, crash_rate=r,
         attempts_per_fault=1,
     )
+    rec = Recorder(enabled=True, fence=False) if args.trace else None
     store = FakeObjectStore(text, plan=plan)
     reader = store.reader(part_bytes=1 << 20, prefetch=3, retries=4,
-                          timeout_s=30.0)
+                          timeout_s=30.0, recorder=rec)
     sc = ShardedStreamScanner(
         plans, args.shards or None, args.chunk, max_retries=16,
         fault_plan=plan, steal=True, min_steal_bytes=1 << 16,
         backoff=BackoffPolicy(base_s=0.001, seed=args.seed),
+        recorder=rec,
     )
     print(
         f"{args.size / 1e6:.0f} MB corpus behind a faulty object store "
@@ -112,6 +122,20 @@ def main():
         print(f"query {qi} (m={len(queries[qi])}): {int(n)} hits "
               f"({planted[qi]} planted)")
     print("recovered counts are bit-identical to the clean scan")
+
+    if rec is not None:
+        rec.export_trace(args.trace)
+        evs = {k: len(rec.events_named(k))
+               for k in ("fault", "retry", "steal", "shed", "range_done")}
+        done = sorted(
+            (e["start"], e["stop"]) for e in rec.events_named("range_done")
+        )
+        covered = sum(e - s for s, e in done)
+        print(
+            f"trace -> {args.trace}  events: "
+            + "  ".join(f"{k}={v}" for k, v in evs.items() if v)
+            + f"  range_done coverage: {covered}/{args.size} bytes"
+        )
 
     # -- graceful degradation: permanent faults, partial result -------------
     perm = FaultPlan(args.seed + 1, crash_rate=0.3, attempts_per_fault=None)

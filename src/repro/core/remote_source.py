@@ -50,6 +50,7 @@ from repro.dist.fault_tolerance import (
     BackoffPolicy,
     default_is_retryable,
 )
+from repro.obs.recorder import NULL as _NULL_REC
 
 DEFAULT_PART_BYTES = 1 << 20
 
@@ -91,6 +92,7 @@ class RemoteRangeReader:
         backoff: Optional[BackoffPolicy] = None,
         is_retryable=None,
         sleep=time.sleep,
+        recorder=None,
     ):
         if part_bytes < 1:
             raise ValueError("part_bytes must be >= 1")
@@ -117,6 +119,10 @@ class RemoteRangeReader:
         )
         self.sleep = sleep
         self.stats = RemoteReadStats()
+        # flight recorder (repro.obs): part waits become spans on the
+        # consuming lane, timeouts/retries become structured events next to
+        # the stats counters.  Defaults to the shared disabled recorder.
+        self.rec = _NULL_REC if recorder is None else recorder
         self._lock = threading.Lock()
 
     # -- per-part fetch with timeout + classified backoff retry -------------
@@ -146,10 +152,18 @@ class RemoteRangeReader:
                     exc = RangeReadTimeout(
                         f"part [{s}, {e}) exceeded timeout_s={self.timeout_s}"
                     )
+                    self.rec.event(
+                        "part_timeout", start=s, stop=e, attempt=attempt
+                    )
                 if attempt == self.retries or not self.is_retryable(exc):
                     raise exc
                 with self._lock:
                     self.stats.retries += 1
+                self.rec.event(
+                    "part_retry", start=s, stop=e, attempt=attempt,
+                    error=repr(exc),
+                )
+                self.rec.count("remote_part_retries")
                 self.sleep(self.backoff.delay_s(attempt))
                 fut = None
         raise AssertionError("unreachable")
@@ -181,10 +195,16 @@ class RemoteRangeReader:
                         inflight.append(((s, e), ex.submit(self.fetch, s, e)))
                         nxt += 1
                     (s, e), fut = inflight.pop(0)
-                    data = self._resolve(ex, fut, s, e)
+                    with self.rec.span(
+                        "part_wait", start=s, stop=e
+                    ) as sp:
+                        data = self._resolve(ex, fut, s, e)
+                        sp.set(bytes=len(data))
                     with self._lock:
                         self.stats.parts += 1
                         self.stats.bytes += len(data)
+                    self.rec.count("remote_parts")
+                    self.rec.count("remote_bytes", len(data))
                     yield np.frombuffer(data, np.uint8)
 
         return gen()

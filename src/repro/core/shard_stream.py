@@ -71,6 +71,7 @@ The ELASTIC layer (DESIGN.md §12) rides on the same seam rule:
 from __future__ import annotations
 
 import dataclasses
+import logging
 import os
 import threading
 import weakref
@@ -103,6 +104,15 @@ from repro.dist.sharding import (
     make_stream_shard_spec,
     merge_ranges,
 )
+from repro.obs.recorder import Recorder, logging_sink
+
+_LOG = logging.getLogger("repro.shard_stream")
+
+# Default flight recorder: disabled (no spans/fencing — the static and
+# elastic paths keep their pipeline shape) but with the module logger as an
+# event sink, so steal/shed/retry/straggler events surface as log lines when
+# no recorder is attached (DESIGN.md §13).
+_DEFAULT_REC = Recorder(enabled=False, fence=False, sinks=(logging_sink(_LOG),))
 
 # file-like sources share one OS handle between shards: reads go through a
 # per-handle lock so concurrently-scanned shards can't interleave seek/read
@@ -391,6 +401,15 @@ class ShardedStreamScanner:
     Results are bit-identical to a single-host :class:`StreamScanner` for
     every shard count — the acceptance property the CI ``multihost`` job
     sweeps under 8 forced host devices.
+
+    ``recorder`` (DESIGN.md §13) threads one flight recorder through every
+    layer of a scan: per-shard/per-lane ``scan_range`` spans wrapping the
+    chunk loop's ``host_prep``/``device_put``/``dispatch`` spans, ``steal``
+    / ``shed`` / ``straggler`` / ``range_done`` / ``range_lost`` instant
+    events whose beta-aligned byte ranges exactly tile the input, and the
+    retry loop's ``retry``/``retry_exhausted`` events.  A ``fault_plan``
+    without its own recorder inherits this one, so a chaos trace shows each
+    injected fault next to the retry it triggered.
     """
 
     def __init__(
@@ -412,14 +431,26 @@ class ShardedStreamScanner:
         is_retryable=None,
         backoff: Optional[BackoffPolicy] = None,
         fault_plan=None,
+        recorder: Optional[Recorder] = None,
     ):
         if on_exhausted not in ("raise", "partial"):
             raise ValueError(
                 f"on_exhausted must be 'raise' or 'partial', got {on_exhausted!r}"
             )
+        # one recorder serves every per-shard scanner, the retry loops, and
+        # (when the caller didn't wire one) the fault plan, so a single
+        # trace shows each injection next to the retry it triggered
+        self.rec = _DEFAULT_REC if recorder is None else recorder
+        if (
+            recorder is not None
+            and fault_plan is not None
+            and getattr(fault_plan, "recorder", None) is None
+        ):
+            fault_plan.recorder = self.rec
         self.plans = tuple(plans)
         template = StreamScanner(
-            self.plans, chunk_bytes, k=k, fused=fused, use_kernel=use_kernel
+            self.plans, chunk_bytes, k=k, fused=fused, use_kernel=use_kernel,
+            recorder=recorder,
         )
         self.overlap = template.overlap
         self.max_m = template.max_m
@@ -473,14 +504,17 @@ class ShardedStreamScanner:
             )
         return got
 
-    def _scanner_on(self, device) -> StreamScanner:
+    def _scanner_on(self, device, lane: Optional[str] = None) -> StreamScanner:
         return StreamScanner(
             self._plans_on(device), self.chunk_bytes, k=self.k, device=device,
             fused=self.fused, use_kernel=self.use_kernel,
+            recorder=self.rec, lane=lane,
         )
 
     def _scanner(self, shard_i: int) -> StreamScanner:
-        return self._scanner_on(self.devices[shard_i % len(self.devices)])
+        return self._scanner_on(
+            self.devices[shard_i % len(self.devices)], lane=f"shard{shard_i}"
+        )
 
     def _my_shards(self, n_shards: int) -> range:
         return range(jax.process_index(), n_shards, jax.process_count())
@@ -489,22 +523,26 @@ class ShardedStreamScanner:
         """Run ``consume(scanner, range_source, prefix, start)`` for shard i
         with re-open-and-rescan retry; returns consume's result."""
         s, e = spec.ranges[i]
+        lane = f"shard{i}"
 
         def attempt():
-            if self.fault_plan is not None:
-                self.fault_plan.check("shard", i)
-            prefix = None
-            if s > 0:
-                ps, pe = spec.prefix_range(i)
-                prefix = read_range(source, ps, pe)
-                if len(prefix) != pe - ps:
-                    raise ShortRangeRead(
-                        f"shard {i}: overlap prefix delivered "
-                        f"{len(prefix)} bytes, expected {pe - ps}"
-                    )
-            sc = self._scanner(i)
-            rs = _exact_chunks(open_range(source, s, e), e - s, i)
-            out = consume(sc, rs, prefix, s)
+            with self.rec.span(
+                "scan_range", lane=lane, shard=i, start=s, stop=e
+            ):
+                if self.fault_plan is not None:
+                    self.fault_plan.check("shard", i)
+                prefix = None
+                if s > 0:
+                    ps, pe = spec.prefix_range(i)
+                    prefix = read_range(source, ps, pe)
+                    if len(prefix) != pe - ps:
+                        raise ShortRangeRead(
+                            f"shard {i}: overlap prefix delivered "
+                            f"{len(prefix)} bytes, expected {pe - ps}"
+                        )
+                sc = self._scanner(i)
+                rs = _exact_chunks(open_range(source, s, e), e - s, i)
+                out = consume(sc, rs, prefix, s)
             return sc, out
 
         def on_failure(attempt_i, exc):
@@ -515,7 +553,9 @@ class ShardedStreamScanner:
         sc, out = run_with_retries(
             attempt, retries=self.max_retries, on_failure=on_failure,
             is_retryable=self.is_retryable, backoff=self.backoff,
+            recorder=self.rec, label=lane,
         )
+        self.rec.event("range_done", lane=lane, origin=i, start=s, stop=e)
         self.dispatch_count += sc.dispatch_count
         return out
 
@@ -561,8 +601,13 @@ class ShardedStreamScanner:
                 )
                 if thief is None:
                     work.append(_WorkItem(shed[0], shed[1], item.origin))
+            self.rec.event(
+                "steal" if thief is not None else "shed",
+                victim=item.origin, thief=thief,
+                start=shed[0], stop=shed[1], reason=reason,
+            )
 
-        def timed_chunks(scan: _StealableScan, item: _WorkItem):
+        def timed_chunks(scan: _StealableScan, item: _WorkItem, lane_name: str):
             # host-step watchdog: a straggling step sheds the trailing range
             wd = StepWatchdog(
                 factor=self.straggler_factor, policy="log", min_history=3
@@ -577,6 +622,13 @@ class ShardedStreamScanner:
                     wd.end_step()
                     return
                 if wd.end_step() is not None:
+                    ev = wd.events[-1]
+                    self.rec.event(
+                        "straggler", lane=lane_name, origin=item.origin,
+                        step=ev.step, duration_s=round(ev.duration_s, 6),
+                        median_s=round(ev.median_s, 6),
+                        factor=round(ev.factor, 2),
+                    )
                     shed = scan.try_shed(self.min_steal_bytes)
                     if shed is not None:
                         push_shed(item, shed, None, "straggler")
@@ -584,34 +636,44 @@ class ShardedStreamScanner:
                 step += 1
 
         def scan_one(lane: int, device, item: _WorkItem):
+            lane_name = f"lane{lane}"
+
             def attempt():
-                if self.fault_plan is not None:
-                    self.fault_plan.check("shard", item.origin)
-                prefix = None
-                if item.start > 0:
-                    ps = max(0, item.start - self.overlap)
-                    prefix = read_range(source, ps, item.start)
-                    if len(prefix) != item.start - ps:
-                        raise ShortRangeRead(
-                            f"range [{item.start}, {item.stop}): overlap "
-                            f"prefix delivered {len(prefix)} bytes, "
-                            f"expected {item.start - ps}"
-                        )
-                scan = _StealableScan(
-                    source, item.start, item.stop,
-                    align=spec.align, piece_bytes=self.chunk_bytes,
-                )
-                sc = self._scanner_on(device)
-                with lock:
-                    active[lane] = (scan, item)
-                try:
-                    out = consume(sc, timed_chunks(scan, item), prefix, item.start)
-                finally:
+                with self.rec.span(
+                    "scan_range", lane=lane_name, origin=item.origin,
+                    start=item.start, stop=item.stop,
+                ) as sp:
+                    if self.fault_plan is not None:
+                        self.fault_plan.check("shard", item.origin)
+                    prefix = None
+                    if item.start > 0:
+                        ps = max(0, item.start - self.overlap)
+                        prefix = read_range(source, ps, item.start)
+                        if len(prefix) != item.start - ps:
+                            raise ShortRangeRead(
+                                f"range [{item.start}, {item.stop}): overlap "
+                                f"prefix delivered {len(prefix)} bytes, "
+                                f"expected {item.start - ps}"
+                            )
+                    scan = _StealableScan(
+                        source, item.start, item.stop,
+                        align=spec.align, piece_bytes=self.chunk_bytes,
+                    )
+                    sc = self._scanner_on(device, lane=lane_name)
                     with lock:
-                        active.pop(lane, None)
-                    # sheds survive into retries (rescan only what's left)
-                    # and into the missing range on exhaustion
-                    item.stop = scan.retire()
+                        active[lane] = (scan, item)
+                    try:
+                        out = consume(
+                            sc, timed_chunks(scan, item, lane_name),
+                            prefix, item.start,
+                        )
+                    finally:
+                        with lock:
+                            active.pop(lane, None)
+                        # sheds survive into retries (rescan only what's left)
+                        # and into the missing range on exhaustion
+                        item.stop = scan.retire()
+                        sp.set(stop=item.stop)  # the post-shed truth
                 return sc, out
 
             def on_failure(attempt_i, exc):
@@ -625,6 +687,11 @@ class ShardedStreamScanner:
             sc, out = run_with_retries(
                 attempt, retries=self.max_retries, on_failure=on_failure,
                 is_retryable=self.is_retryable, backoff=self.backoff,
+                recorder=self.rec, label=f"shard{item.origin}",
+            )
+            self.rec.event(
+                "range_done", lane=lane_name, origin=item.origin,
+                start=item.start, stop=item.stop,
             )
             with lock:
                 self.dispatch_count += sc.dispatch_count
@@ -660,12 +727,19 @@ class ShardedStreamScanner:
                             missing.append((item.start, item.stop))
                         else:
                             errors.append(exc)
-                    if self.on_exhausted != "partial":
+                    if self.on_exhausted == "partial":
+                        self.rec.event(
+                            "range_lost", lane=f"lane{lane}",
+                            origin=item.origin, start=item.start,
+                            stop=item.stop, error=repr(exc),
+                        )
+                    else:
                         return
 
         threads = [
             threading.Thread(
-                target=worker, args=(j, lane_devices[j]), daemon=True
+                target=worker, args=(j, lane_devices[j]),
+                name=f"lane{j}", daemon=True,
             )
             for j in range(n_lanes)
         ]

@@ -63,8 +63,15 @@ import jax.numpy as jnp
 from repro.core import engine
 from repro.core.engine import PatternPlan
 from repro.core.epsm import EPSMC_BETA
+from repro.obs.recorder import Recorder, logging_sink
 
 _LOG = logging.getLogger("repro.stream")
+
+# The module's default flight recorder: disabled (no spans, no fencing, no
+# buffers — the <2% bench_obs budget) but with the module logger as an event
+# sink, so the pre-recorder log lines (auto-chunk probe, kernel fallback,
+# stragglers) keep appearing when no recorder is attached (DESIGN.md §13).
+_DEFAULT_REC = Recorder(enabled=False, fence=False, sinks=(logging_sink(_LOG),))
 
 # Floor device window capacity (bytes) for adaptive sizing, and the value a
 # backend with no memory stats and negligible dispatch overhead lands on.
@@ -405,6 +412,16 @@ class StreamScanner:
     must sit on a beta block boundary so chunk-local aligned block
     fingerprints still coincide with the global ones.
 
+    ``recorder`` attaches a :class:`~repro.obs.recorder.Recorder` (DESIGN.md
+    §13): every chunk then traces a ``host_prep`` span (source read /
+    decompress / window assembly), a ``device_put`` span, and a fenced
+    ``dispatch`` span (the jitted scan, seam fusion included), plus
+    ``dispatches``/``bytes_scanned`` counters.  The default is the module's
+    disabled recorder — no spans, no fencing, the double-buffered pipeline
+    untouched — whose only effect is feeding instant events (auto-chunk
+    probe, kernel fallback, stragglers) to the module logger.  ``lane``
+    names this scanner's trace track (the sharded scanner sets it).
+
     ``watchdog`` arms a :class:`~repro.dist.fault_tolerance.StepWatchdog`
     around every chunk's HOST step — source read, decompression, window
     assembly — the part where a slow disk or object store stalls (device
@@ -427,10 +444,18 @@ class StreamScanner:
         use_kernel: bool = False,
         watchdog=None,
         on_straggler=None,
+        recorder: Optional[Recorder] = None,
+        lane: Optional[str] = None,
     ):
         self.plans = tuple(plans)
         if not self.plans:
             raise ValueError("StreamScanner needs at least one PatternPlan")
+        # rec is consulted unconditionally on every chunk (spans + counters);
+        # the module default is the disabled recorder with a logging sink
+        # (DESIGN.md §13).  ``lane`` names this scanner's trace track — the
+        # sharded scanner sets it so stolen ranges stay attributed.
+        self.rec = _DEFAULT_REC if recorder is None else recorder
+        self.lane = lane
         self.device = device
         if device is not None:
             self.plans = engine.replicate_plans(self.plans, device)
@@ -446,15 +471,16 @@ class StreamScanner:
 
             self.spec = build_mega_spec(self.plans, k=k)
             if self.spec is None:
-                _LOG.info(
-                    "megascan kernel ineligible for this plan set; "
-                    "using the pure-JAX fused path"
+                self.rec.event(
+                    "kernel_fallback", lane=self.lane,
+                    reason="megascan ineligible for this plan set; "
+                    "using the pure-JAX fused path",
                 )
         if chunk_bytes == "auto":
             chunk_bytes = auto_chunk_bytes(device=device)
-            _LOG.info(
-                "StreamScanner auto chunk_bytes=%d (dispatch overhead "
-                "%.1f us)", chunk_bytes, 1e6 * _dispatch_overhead_s(),
+            self.rec.event(
+                "auto_chunk", lane=self.lane, chunk_bytes=int(chunk_bytes),
+                dispatch_overhead_us=round(1e6 * _dispatch_overhead_s(), 1),
             )
         self.chunk_bytes = int(chunk_bytes)
         self.max_m = max(p.m for p in self.plans)
@@ -544,41 +570,73 @@ class StreamScanner:
             base += L - len(carry)
 
     def _steps(self, source, *, prefix=None, start: int = 0):
-        """The `_windows` iterator with the optional per-chunk watchdog armed
-        around each window's PRODUCTION (source read, decompress, assembly):
-        the stall site for slow storage.  A flagged chunk either raises
-        (policy="raise") or is reported to ``on_straggler`` with the
-        recorded event."""
+        """The `_windows` iterator with each window's PRODUCTION (source
+        read, decompress, assembly) wrapped in a ``host_prep`` recorder span
+        and, when a watchdog is armed, timed for straggling: the stall site
+        for slow storage.  A flagged chunk either raises (policy="raise") or
+        is recorded as a ``straggler`` event and reported to
+        ``on_straggler``."""
+        rec, lane = self.rec, self.lane
         wd = self.watchdog
-        if wd is None:
-            yield from self._windows(source, prefix=prefix, start=start)
-            return
         it = self._windows(source, prefix=prefix, start=start)
         step = 0
         while True:
-            wd.start_step(step)
+            if wd is not None:
+                wd.start_step(step)
             try:
-                item = next(it)
+                with rec.span("host_prep", lane=lane, step=step) as sp:
+                    win, L, carry_len, base = next(it)
+                    sp.set(bytes=int(L) - int(carry_len))
             except StopIteration:
-                wd.end_step()  # close the pair; an instant EOF never flags
+                if wd is not None:
+                    wd.end_step()  # close the pair; an instant EOF never flags
                 return
-            if wd.end_step() is not None and self.on_straggler is not None:
-                self.on_straggler(wd.events[-1])
+            if wd is not None and wd.end_step() is not None:
+                ev = wd.events[-1]
+                rec.event(
+                    "straggler", lane=lane, step=ev.step,
+                    duration_s=round(ev.duration_s, 6),
+                    median_s=round(ev.median_s, 6),
+                    factor=round(ev.factor, 2),
+                )
+                if self.on_straggler is not None:
+                    self.on_straggler(ev)
             step += 1
-            yield item
+            yield win, L, carry_len, base
 
     # -- device loop --------------------------------------------------------
 
+    def _put(self, win):
+        """Host->device window transfer under a ``device_put`` span.  The
+        transfer itself is async; the fence (enabled recorder only) charges
+        the copy to this span instead of the next dispatch."""
+        with self.rec.span(
+            "device_put", lane=self.lane, bytes=int(win.nbytes)
+        ) as sp:
+            return sp.fence(jax.device_put(win, self.device))
+
     def _dispatch_count(self, counts, window_dev, length, prev_ov):
         self.dispatch_count += 1
-        if self.spec is not None:
-            return _jitted_kernel_step(self.spec)(
-                counts, window_dev, length, prev_ov, self.plans
-            )
-        return _jitted_count_step(self.fused, self.shared)(
-            counts, window_dev, length, prev_ov, self.plans,
-            ov=self.overlap, k=self.k,
-        )
+        new_bytes = int(length) - int(prev_ov)
+        with self.rec.span(
+            "dispatch", lane=self.lane, chunk=self.dispatch_count,
+            bytes=new_bytes,
+        ) as sp:
+            if self.spec is not None:
+                counts = _jitted_kernel_step(self.spec)(
+                    counts, window_dev, length, prev_ov, self.plans
+                )
+            else:
+                counts = _jitted_count_step(self.fused, self.shared)(
+                    counts, window_dev, length, prev_ov, self.plans,
+                    ov=self.overlap, k=self.k,
+                )
+            # seam fusion (end_min gate / overlap sub-index) runs inside this
+            # same dispatch; the fence makes the span cover the device work
+            sp.fence(counts)
+        self.rec.count("dispatches")
+        self.rec.count("bytes_scanned", new_bytes)
+        return counts
 
     def _zero_counts(self):
         z = jnp.zeros((self.n_patterns,), jnp.int32)
@@ -597,7 +655,7 @@ class StreamScanner:
         for win, L, carry_len, _base in self._steps(
             source, prefix=prefix, start=start
         ):
-            dev = jax.device_put(win, self.device)
+            dev = self._put(win)
             if pending is not None:
                 counts = self._dispatch_count(counts, *pending)
             pending = (dev, np.int32(L), np.int32(carry_len))
@@ -625,7 +683,7 @@ class StreamScanner:
         pending = None
         chunks = 0
         for win, L, carry_len, _base in self._steps(source):
-            dev = jax.device_put(win, self.device)
+            dev = self._put(win)
             if pending is not None:
                 counts = self._dispatch_count(counts, *pending)
                 chunks += 1
@@ -650,7 +708,7 @@ class StreamScanner:
         for win, L, carry_len, base in self._steps(
             source, prefix=prefix, start=start
         ):
-            dev = jax.device_put(win, self.device)
+            dev = self._put(win)
             if pending is not None:
                 yield self._flush_mask(*pending)
             pending = (dev, np.int32(L), np.int32(carry_len), base, L)
@@ -659,9 +717,16 @@ class StreamScanner:
 
     def _flush_mask(self, dev, length, prev_ov, base, L):
         self.dispatch_count += 1
-        mask = _mask_step(
-            dev, length, prev_ov, self.plans, k=self.k, fused=self.fused
-        )
+        new_bytes = int(length) - int(prev_ov)
+        with self.rec.span(
+            "dispatch", lane=self.lane, chunk=self.dispatch_count,
+            bytes=new_bytes,
+        ) as sp:
+            mask = sp.fence(_mask_step(
+                dev, length, prev_ov, self.plans, k=self.k, fused=self.fused
+            ))
+        self.rec.count("dispatches")
+        self.rec.count("bytes_scanned", new_bytes)
         return base, int(prev_ov), np.asarray(jax.device_get(mask))[:, :L]
 
     def positions_many(

@@ -89,6 +89,7 @@ class FaultPlan:
         crash_rate: float = 0.0,
         attempts_per_fault: Optional[int] = 1,
         sleep=time.sleep,
+        recorder=None,
     ):
         for name, rate in (
             ("read_error_rate", read_error_rate),
@@ -108,6 +109,10 @@ class FaultPlan:
         self.crash_rate = crash_rate
         self.attempts_per_fault = attempts_per_fault
         self.sleep = sleep
+        # optional flight recorder (repro.obs): every fired fault becomes a
+        # structured "fault" event + faults_injected counter, so a chaos
+        # trace shows each injection next to the retry it triggered
+        self.recorder = recorder
         self.events: List[FaultEvent] = []
         self._counts: Dict[Tuple[str, str, object], int] = {}
         self._lock = threading.Lock()
@@ -132,6 +137,11 @@ class FaultPlan:
             if self.attempts_per_fault is not None and n > self.attempts_per_fault:
                 return False  # healed: the fault burned its attempts
             self.events.append(FaultEvent(action, kind, key))
+        if self.recorder is not None:  # outside the lock: sinks may log
+            self.recorder.event(
+                "fault", action=action, kind=kind, key=repr(key)
+            )
+            self.recorder.count("faults_injected")
         return True
 
     # -- the two site calls -------------------------------------------------

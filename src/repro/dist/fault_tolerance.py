@@ -117,6 +117,8 @@ def run_with_retries(
     is_retryable: Optional[Callable[[BaseException], bool]] = None,
     backoff: Optional[BackoffPolicy] = None,
     sleep=time.sleep,
+    recorder=None,
+    label: str = "task",
 ):
     """Call ``fn()``; on a RETRYABLE exception retry up to ``retries`` more
     times (waiting ``backoff.delay_s(attempt)`` between attempts when a
@@ -125,16 +127,32 @@ def run_with_retries(
     hook rejects — re-raise immediately: a TypeError from plan construction
     must not burn the retry budget a flaky object store needs.
     ``on_failure(attempt, exc)`` observes every failed attempt, fatal ones
-    included (the sharded scanner logs a :class:`ShardRetry` there)."""
+    included (the sharded scanner logs a :class:`ShardRetry` there).
+
+    ``recorder`` (a :class:`repro.obs.recorder.Recorder`) gets one
+    structured ``retry`` event per retried attempt and one ``retry_exhausted``
+    / ``retry_fatal`` event when the loop gives up, each tagged with
+    ``label`` — the flight-recorder view of the retry budget (DESIGN.md
+    §13)."""
     classify = default_is_retryable if is_retryable is None else is_retryable
+    if recorder is None:
+        from repro.obs.recorder import NULL as recorder
     for attempt in range(retries + 1):
         try:
             return fn()
         except Exception as exc:  # noqa: BLE001 - a shard may die any way it likes
             if on_failure is not None:
                 on_failure(attempt, exc)
-            if attempt == retries or not classify(exc):
+            retryable = classify(exc)
+            if attempt == retries or not retryable:
+                recorder.event(
+                    "retry_exhausted" if retryable else "retry_fatal",
+                    task=label, attempt=attempt, error=repr(exc),
+                )
                 raise
+            recorder.event(
+                "retry", task=label, attempt=attempt, error=repr(exc)
+            )
             if backoff is not None:
                 sleep(backoff.delay_s(attempt))
 

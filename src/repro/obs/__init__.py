@@ -1,0 +1,38 @@
+"""repro.obs — the scan telemetry plane (DESIGN.md §13).
+
+Zero-dependency tracing + metrics + flight recorder for the
+streaming/sharded engine:
+
+  * :mod:`repro.obs.trace`    — nestable spans, per-lane buffers,
+    ``block_until_ready`` fencing, Chrome/Perfetto trace_event export;
+  * :mod:`repro.obs.metrics`  — counters/gauges/histograms with a
+    deterministic summary;
+  * :mod:`repro.obs.recorder` — the :class:`Recorder` protocol threaded
+    through ``StreamScanner`` / ``ShardedStreamScanner`` /
+    ``RemoteRangeReader`` / ``run_with_retries``, plus the process-wide
+    disabled :data:`NULL` recorder and :func:`logging_sink`.
+"""
+
+from repro.obs.metrics import Metrics
+from repro.obs.recorder import NULL, Recorder, logging_sink
+from repro.obs.trace import (
+    NULL_SPAN,
+    NullSpan,
+    Span,
+    TraceBuffer,
+    to_chrome,
+    write_chrome,
+)
+
+__all__ = [
+    "Metrics",
+    "NULL",
+    "NULL_SPAN",
+    "NullSpan",
+    "Recorder",
+    "Span",
+    "TraceBuffer",
+    "logging_sink",
+    "to_chrome",
+    "write_chrome",
+]

@@ -34,7 +34,8 @@ def test_committed_markdown_is_fresh():
 
 
 def test_schema_violations_raise(tmp_path):
-    rows = json.loads((OUTDIR / "BENCH_multipattern.json").read_text())
+    doc = json.loads((OUTDIR / "BENCH_multipattern.json").read_text())
+    rows, _ = rt.split_meta("BENCH_multipattern.json", doc)
     good = dict(rows[0])
     for corruption in (
         {"us_per_call": None},
