@@ -35,6 +35,8 @@ FILE_EXTRAS = {
     "BENCH_multipattern.json": {"P": int, "B": int, "m": int,
                                 "speedup_vs_vmap": (int, float)},
     "BENCH_approx.json": {"m": int, "k": int, "ratio_vs_exact": (int, float)},
+    "BENCH_dictionary.json": {"P": int, "texture": str, "route": str,
+                              "ratio_vs_avg": (int, float)},
     "BENCH_stream.json": {},   # two row families; shared keys only
     "BENCH_shard.json": {"shards": int, "speedup_vs_1shard": (int, float),
                          "devices": int},

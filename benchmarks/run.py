@@ -184,6 +184,121 @@ def bench_multipattern(size: int, outdir: Path):
     )
 
 
+def make_adversarial_text(pats: np.ndarray, n: int) -> np.ndarray:
+    """Worst-case texture for the union-LUT gate: the dictionary tiled end
+    to end.  Every pattern-aligned window probes a REGISTERED fingerprint,
+    so candidate density saturates (the measured union-block count hits the
+    total) — the texture that must reroute to the bounded fallback
+    (automaton / slot-dense CSR) instead of melting the sparse gather.
+    Deterministic: a pure function of the dictionary."""
+    flat = pats.reshape(-1)
+    reps = -(-n // flat.size) + 1
+    return np.tile(flat, reps)[:n].copy()
+
+
+def _dict_reference_counts(text: np.ndarray, pats: np.ndarray) -> np.ndarray:
+    """Exact numpy occurrence counts for a (P, 8) dictionary via the u64
+    window view — O(n log n), feasible at P = 50k where the naive per-
+    pattern scan is not."""
+    win = np.lib.stride_tricks.sliding_window_view(text, pats.shape[1])
+    w64 = np.ascontiguousarray(win).view(np.uint64)[:, 0]
+    p64 = np.ascontiguousarray(pats).view(np.uint64)[:, 0]
+    uniq, cnt = np.unique(w64, return_counts=True)
+    pos = np.minimum(np.searchsorted(uniq, p64), len(uniq) - 1)
+    return np.where(uniq[pos] == p64, cnt[pos], 0).astype(np.int32)
+
+
+def bench_dictionary(outdir: Path):
+    """Dictionary-scale matching (DESIGN.md §14): P x texture grid.
+
+    One dispatch answers P patterns against a 1 MB text for
+    P in {32, 1k, 10k, 50k}, on an average (random + planted) texture and
+    the adversarial tiled-dictionary texture.  Writes BENCH_dictionary.json
+    rows {name, us_per_call, GBps, P, texture, route, ratio_vs_avg,
+    plan_build_ms}: ``route`` is what engine.route_probe measured for that
+    (text, plans) pair, ``ratio_vs_avg`` is the adversarial slowdown
+    against the same-P average row (the <= 5x acceptance bound), and
+    ``plan_build_ms`` is the recorded plan_compile span (repro.obs).
+    Every measured count is cross-checked against an exact numpy u64
+    reference before timing."""
+    import json
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import engine as eng
+    from repro.obs.recorder import Recorder
+
+    n, m = 1_000_000, 8
+    rng = np.random.default_rng(0xD1C7)
+    rows = []
+    for P in (32, 1_000, 10_000, 50_000):
+        pats = np.unique(
+            rng.integers(0, 256, size=(2 * P, m), dtype=np.uint8), axis=0
+        )
+        rng.shuffle(pats)
+        pats = pats[:P]
+        rec = Recorder(fence=False)
+        t0 = time.perf_counter()
+        # bucket=True at every P: the sweep measures the dictionary-scale
+        # machinery itself (tests/test_dictionary.py pins it bit-identical
+        # to the flat plans), so even the P=32 row gets the bounded CSR
+        # routes instead of the flat dense fallback on the flood texture
+        plans = eng.compile_patterns(
+            [p for p in pats], bucket=True, recorder=rec
+        )
+        plan_ms = (time.perf_counter() - t0) * 1e3
+
+        avg = rng.integers(0, 256, size=n, dtype=np.uint8)
+        for i in range(0, P, max(1, P // 37)):
+            pos = (i * 8191) % (n - m)
+            avg[pos : pos + m] = pats[i]
+        adv = make_adversarial_text(pats, n)
+
+        f = jax.jit(
+            lambda t, plans=plans: eng.count_many(eng.build_index(t), plans)
+        )
+        order = eng.plan_order(plans)
+        base_dt = None
+        for texture, text in (("average", avg), ("adversarial", adv)):
+            idx = eng.build_index(text)
+            info = eng.route_probe(idx, plans, recorder=rec)
+            tj = jnp.asarray(text)
+            got = np.asarray(f(tj))[0]
+            want = _dict_reference_counts(text, pats)[order]
+            assert np.array_equal(got, want), (
+                f"dictionary count divergence at P={P} texture={texture}"
+            )
+            dt = timeit_median(
+                f, tj, label=f"dictionary/{texture}/p{P}"
+            )
+            if texture == "average":
+                base_dt = dt
+            ratio = dt / base_dt
+            rows.append({
+                "name": f"dictionary/{texture}/p{P}",
+                "us_per_call": dt * 1e6,
+                "GBps": n / dt / 1e9,
+                "size_bytes": n,
+                "P": P,
+                "m": m,
+                "texture": texture,
+                "route": str(info["route"]),
+                "ratio_vs_avg": round(ratio, 3),
+                "plan_build_ms": round(plan_ms, 1),
+                "matches": int(got.sum()),
+            })
+            _emit(
+                f"dictionary/{texture}/p{P}", dt * 1e6,
+                f"route={info['route']};ratio={ratio:.2f}x;"
+                f"plan_ms={plan_ms:.0f}",
+            )
+    (outdir / "BENCH_dictionary.json").write_text(
+        json.dumps({"meta": {"compile_ms": drain_compile_ms()}, "rows": rows},
+                   indent=1)
+    )
+
+
 def bench_approx(size: int, outdir: Path):
     """k-mismatch engine (repro.approx) vs the exact path, machine-readable.
 
@@ -925,6 +1040,7 @@ def main():
         "paper_tables": lambda: bench_paper_tables(size, args.full, outdir),
         "kernels": lambda: bench_kernels(size, outdir),
         "multipattern": lambda: bench_multipattern(1_000_000, outdir),
+        "dictionary": lambda: bench_dictionary(outdir),
         "approx": lambda: bench_approx(1_000_000, outdir),
         "stream": lambda: bench_stream(outdir),
         "megascan": lambda: bench_megascan(outdir),

@@ -1,0 +1,317 @@
+"""Packed Aho-Corasick automaton: the engine's linear-time dictionary
+fallback (DESIGN.md §14).
+
+The union-LUT plans (core/engine.py) are expected-case machinery: a
+fingerprint-collision flood — adversarial text whose windows hash into
+occupied LUT slots without matching any pattern — can push the candidate
+stream toward one candidate per position, and the verify path toward its
+quadratic worst case.  The classical worst-case-safe answer is a failure-
+function automaton over the whole dictionary: one state transition per text
+byte, O(n + occ) total, independent of how the text collides with any hash.
+
+A sequential automaton is useless on this backend (one lax.scan step per
+byte serializes the whole device).  The packed form used here exploits the
+same bounded-context property the paper's packed matchers exploit: with all
+patterns of length <= max_m, the Aho-Corasick state after position i is a
+function of ONLY the last max_m - 1 bytes (the state encodes the longest
+pattern-prefix suffix of the text, which is shorter than max_m).  So the
+text splits into SEG-byte segments scanned in parallel lanes: each lane
+re-derives its entry state from the root over a max_m - 1 byte overlap
+prefix — by the bounded-context property it provably reaches the true
+sequential state by the time it enters its own segment (pinned against the
+sequential reference in kernels/acscan/ref.py) — then emits occurrences for
+the segment it owns.  One lax.scan of SEG + max_m - 1 steps over a (B *
+lanes,) state vector replaces n sequential steps: n / SEG - way parallelism
+with vectorized gathers per step.
+
+Two compressions keep the transition table device-friendly:
+
+  * **byte classes** — only bytes that appear in some pattern get a class;
+    all other bytes (and the virtual pre-text boundary) share class 0,
+    whose transition row is identically "back to root".  The table is
+    (n_states, n_classes), not (n_states, 256).
+  * **CSR output lists** — occurrence emission walks a (out_off, out_ids)
+    CSR of pattern ids per terminal state (suffix-chained, so nested
+    patterns all fire), bounded by the static ``out_max``.
+
+The module is deliberately engine-agnostic (no engine import): it consumes
+raw (B, n) uint8 texts + lengths, so core/engine.py can lazy-import it for
+the shared-path fallback without an import cycle.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+# Parallel-scan segment width: each lane owns SEG output positions and pays
+# max_m - 1 warmup steps re-deriving its entry state.  128 keeps the warmup
+# overhead (max_m - 1) / SEG small for every supported pattern length while
+# leaving n / 128 lanes of parallelism per row.
+AC_SEG = 128
+# Build-time eligibility caps: exceeding any returns None from
+# compile_automaton and the engine keeps its slot-dense bounded verify
+# (still linear, just with the slot_max factor — DESIGN.md §14).
+AC_MAX_STATES = 1 << 20
+AC_MAX_CELLS = 1 << 25   # n_states * n_classes (int32 table entries)
+AC_MAX_OUT = 128         # max suffix-chained emissions per state
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class AutomatonPlan:
+    """Device-resident packed Aho-Corasick over one pattern dictionary."""
+
+    delta: jnp.ndarray    # (n_states * n_classes,) int32 flat transition table
+    classes: jnp.ndarray  # (256,) int32 byte -> class (0 = absent/boundary)
+    out_off: jnp.ndarray  # (n_states + 1,) int32 CSR offsets into out_ids
+    out_ids: jnp.ndarray  # (n_entries,) int32 pattern ids (input order)
+    n_states: int         # static
+    n_classes: int        # static
+    n_entries: int        # static (>= 1; padded)
+    out_max: int          # static: max emissions at any single state
+    max_m: int            # static: longest pattern (bounded-context radius)
+    n_patterns: int       # static: output column count
+
+    def tree_flatten(self):
+        return (
+            (self.delta, self.classes, self.out_off, self.out_ids),
+            (self.n_states, self.n_classes, self.n_entries, self.out_max,
+             self.max_m, self.n_patterns),
+        )
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        delta, classes, out_off, out_ids = children
+        n_states, n_classes, n_entries, out_max, max_m, n_patterns = aux
+        return cls(delta, classes, out_off, out_ids, n_states, n_classes,
+                   n_entries, out_max, max_m, n_patterns)
+
+
+def _np_patterns(patterns: Sequence) -> list:
+    from repro.core.packing import as_u8_np
+
+    rows = []
+    for p in patterns:
+        arr = as_u8_np(p)
+        if arr.ndim != 1 or arr.size == 0:
+            raise ValueError("patterns must be non-empty 1-D byte strings")
+        rows.append(arr)
+    return rows
+
+
+def compile_automaton(
+    patterns: Sequence,
+    *,
+    max_states: int = AC_MAX_STATES,
+    max_cells: int = AC_MAX_CELLS,
+    max_out: int = AC_MAX_OUT,
+) -> Optional[AutomatonPlan]:
+    """Build the packed automaton, or None when the dictionary blows a cap.
+
+    Output columns are the INPUT pattern order (not plan-grouped), so the
+    engine can column-select any plan subset via ``plan.ids``.  Duplicate
+    patterns each get their own column (both ids sit on the shared terminal
+    state's output list) — same multiplicity contract as count_many.
+    """
+    rows = _np_patterns(patterns)
+    if not rows:
+        return None
+    max_m = max(len(r) for r in rows)
+    total = sum(len(r) for r in rows)
+    s_max = total + 1
+    present = np.zeros(256, np.bool_)
+    for r in rows:
+        present[r] = True
+    n_classes = int(present.sum()) + 1  # class 0 = absent bytes + boundary
+    if s_max > max_states or s_max * n_classes > max_cells:
+        return None
+    classes = np.zeros(256, np.int32)
+    classes[present] = np.arange(1, n_classes, dtype=np.int32)
+
+    # --- trie (goto) over class-mapped patterns --------------------------
+    goto = np.full((s_max, n_classes), -1, np.int32)
+    depth = np.zeros(s_max, np.int32)
+    term: list = [[]]  # state -> pattern ids ending exactly here
+    n_states = 1
+    for pid, r in enumerate(rows):
+        s = 0
+        for c in classes[r]:
+            nxt = goto[s, c]
+            if nxt < 0:
+                nxt = n_states
+                goto[s, c] = nxt
+                depth[nxt] = depth[s] + 1
+                term.append([])
+                n_states += 1
+            s = nxt
+        term[s].append(pid)
+    goto = goto[:n_states]
+    depth = depth[:n_states]
+    term_cnt = np.asarray([len(t) for t in term], np.int64)
+
+    # --- BFS failure links, level-vectorized -----------------------------
+    # delta starts as goto; each level's rows are patched from the (already
+    # final) rows of their failure states, so the whole (level, n_classes)
+    # slab is one numpy gather + where instead of a python cell loop.
+    delta = goto.copy()
+    fail = np.zeros(n_states, np.int32)
+    elink = np.full(n_states, -1, np.int32)  # nearest terminal suffix state
+    tot = term_cnt.copy()                    # total emissions per state
+    order = np.argsort(depth, kind="stable")
+    level_at = np.searchsorted(depth[order], np.arange(depth.max() + 2))
+    root_row = delta[0]
+    root_row[root_row < 0] = 0
+    for d in range(1, int(depth.max()) + 1):
+        L = order[level_at[d]:level_at[d + 1]]
+        if L.size == 0:
+            continue
+        df = delta[fail[L]]              # (len(L), n_classes) — final rows
+        rowsL = delta[L]
+        miss = rowsL < 0
+        children = rowsL[~miss]
+        fail[children] = df[~miss]
+        delta[L] = np.where(miss, df, rowsL)
+        fl = fail[L]
+        elink[L] = np.where(term_cnt[fl] > 0, fl, elink[fl])
+        tot[L] += np.where(elink[L] >= 0, tot[np.maximum(elink[L], 0)], 0)
+    out_max = int(tot.max()) if n_states else 0
+    if out_max > max_out:
+        return None
+
+    # --- CSR output lists (suffix-chained) -------------------------------
+    out_off = np.zeros(n_states + 1, np.int64)
+    out_off[1:] = np.cumsum(tot)
+    n_entries = int(out_off[-1])
+    out_ids = np.zeros(max(n_entries, 1), np.int32)
+    # depth order: a state's elink target is strictly shallower, so its CSR
+    # region is already final when the chain below copies from it (state-id
+    # order would not do — a short pattern inserted late has a HIGH id but
+    # sits at LOW depth as everyone's suffix).
+    for s in order[tot[order] > 0]:
+        o = out_off[s]
+        for pid in term[s]:
+            out_ids[o] = pid
+            o += 1
+        e = elink[s]
+        if e >= 0:
+            span = tot[e]
+            out_ids[o:o + span] = out_ids[out_off[e]:out_off[e] + span]
+
+    return AutomatonPlan(
+        delta=jnp.asarray(delta.reshape(-1)),
+        classes=jnp.asarray(classes),
+        out_off=jnp.asarray(out_off, dtype=jnp.int32),
+        out_ids=jnp.asarray(out_ids),
+        n_states=n_states,
+        n_classes=n_classes,
+        n_entries=max(n_entries, 1),
+        out_max=out_max,
+        max_m=max_m,
+        n_patterns=len(rows),
+    )
+
+
+def _segment_classes(
+    cls: jnp.ndarray, seg: int, ov: int
+) -> Tuple[jnp.ndarray, int]:
+    """(B, n) class stream -> (B, lanes, seg + ov) lane windows.  Lane L owns
+    positions [L*seg, (L+1)*seg); its window starts ov bytes earlier, with
+    out-of-range head positions mapped to class 0 (the boundary class, whose
+    transition row is "stay at root" — exactly the sequential automaton's
+    state before the first byte)."""
+    B, n = cls.shape
+    lanes = max(1, -(-n // seg))
+    npad = lanes * seg
+    cls = jnp.pad(cls, ((0, 0), (0, npad - n)))
+    gpos = (
+        jnp.arange(lanes, dtype=jnp.int32)[:, None] * seg
+        - ov
+        + jnp.arange(seg + ov, dtype=jnp.int32)[None, :]
+    )  # (lanes, seg + ov)
+    win = cls[:, jnp.clip(gpos, 0, npad - 1)]  # (B, lanes, seg + ov)
+    return jnp.where((gpos >= 0)[None, :, :], win, 0), lanes
+
+
+def automaton_states(
+    text: jnp.ndarray,
+    auto: AutomatonPlan,
+    *,
+    seg: int = AC_SEG,
+    use_kernel: bool = False,
+) -> jnp.ndarray:
+    """(B, n) int32 automaton state AFTER consuming each byte — bit-identical
+    to the sequential scan (kernels/acscan/ref.py) by the bounded-context
+    property.  ``use_kernel`` routes the transition scan through the Pallas
+    acscan kernel instead of lax.scan (same states, pinned in tests)."""
+    B, n = text.shape
+    if n == 0:
+        return jnp.zeros((B, 0), jnp.int32)
+    ov = auto.max_m - 1
+    cls = auto.classes[text]
+    win, lanes = _segment_classes(cls, seg, ov)
+    T = seg + ov
+    if use_kernel:
+        from repro.kernels.acscan import acscan_states
+
+        states = acscan_states(
+            win.reshape(B * lanes, T), auto.delta, auto.n_classes, seg
+        ).reshape(B, lanes * seg)
+        return states[:, :n]
+
+    nclass = jnp.int32(auto.n_classes)
+
+    def step(s, c):
+        s2 = auto.delta[s * nclass + c]
+        return s2, s2
+
+    _, ys = lax.scan(
+        step,
+        jnp.zeros((B, lanes), jnp.int32),
+        jnp.moveaxis(win, -1, 0),  # (T, B, lanes)
+    )
+    states = jnp.moveaxis(ys[ov:], 0, -1).reshape(B, lanes * seg)
+    return states[:, :n]
+
+
+def count_automaton(
+    text: jnp.ndarray,
+    lengths: jnp.ndarray,
+    auto: AutomatonPlan,
+    *,
+    end_min=None,
+    seg: int = AC_SEG,
+    use_kernel: bool = False,
+) -> jnp.ndarray:
+    """int32 (B, n_patterns) occurrence counts — input pattern order.
+
+    Matches engine.count_many semantics exactly: an occurrence of pattern p
+    (length m_p) counts when it lies fully inside the row's true length, and
+    ``end_min`` keeps only occurrences ENDING at or past it (the streaming
+    seam gate, which for end-position emission is just ``pos >= end_min``).
+    Cost is O(n) transitions + O(n * out_max) emission — independent of the
+    candidate density that drives the LUT paths' lax.cond fallbacks."""
+    B, n = text.shape
+    counts = jnp.zeros((B, auto.n_patterns), jnp.int32)
+    if n == 0:
+        return counts
+    s = automaton_states(text, auto, seg=seg, use_kernel=use_kernel)
+    base = auto.out_off[s]
+    cnt = auto.out_off[s + 1] - base
+    pos = jnp.arange(n, dtype=jnp.int32)[None, :]
+    gate = pos < jnp.asarray(lengths, jnp.int32)[:, None]
+    if end_min is not None:
+        gate = gate & (pos >= jnp.asarray(end_min, jnp.int32))
+    bix = jnp.arange(B, dtype=jnp.int32)[:, None]
+    for j in range(auto.out_max):
+        act = (j < cnt) & gate
+        eidx = jnp.minimum(base + j, auto.n_entries - 1)
+        pid = auto.out_ids[eidx]
+        counts = counts.at[bix, pid].add(act.astype(jnp.int32), mode="drop")
+    return counts

@@ -54,6 +54,7 @@ from repro.core.epsm import EPSMA_MAX, EPSMB_MAX, EPSMC_BETA, _epsmc_stride
 from repro.core.packing import (
     PACK,
     as_u8,
+    as_u8_np,
     fingerprint_weights,
     fp_accum_word,
     fp_finalize,
@@ -67,6 +68,27 @@ from repro.core.packing import (
 # positives cost a whole block verification, so we buy 2^17 * 1 byte of table
 # to keep the candidate stream sparse.
 ENGINE_KBITS = 17
+
+# --- dictionary scale (bucketed CSR plans, DESIGN.md §14) -------------------
+# fp_finalize keeps the TOP kbits of the mixed sum, so the 17-bit engine
+# fingerprint is exactly the prefix of any wider one: "bucketing" the union
+# LUT into per-prefix sub-tables IS widening kbits by `bbits` — one flat
+# probe, sub-LUT semantics.  bbits targets DICT_SLOTS_PER_PATTERN slots per
+# pattern so per-slot occupancy (and with it the bounded verify cost and the
+# candidate-block density) stays roughly constant as P grows 32 -> 50k.
+DICT_BUCKET_MIN_P = 128    # bucket="auto": CSR plans from this group size
+DICT_BBITS_MAX = 5         # kbits + bbits <= 22: slot_off tops out at 16 MB
+DICT_SLOTS_PER_PATTERN = 64
+# Static occupancy cliff: a pattern set whose max slot occupancy exceeds
+# this makes even the bounded verify pay slot_max deep per position — route
+# straight to the automaton when one was compiled (pattern-set-adversarial
+# guard; text-adversarial floods are the lax.cond overflow below).
+SLOT_VERIFY_CAP = 64
+AUTOMATON_MIN_P = 1024     # automaton="auto": build from this total P
+# Expected candidate-BLOCK density (from the static LUT popcount) above
+# which the sparse compaction cannot pay: skip it statically and run the
+# bounded slot-dense verify (no lax.cond, no wasted union pass).
+DENSE_ROUTE_RHO = 0.5
 # Block width for compacting per-position EPSMb candidates before the
 # fixed-size nonzero: nonzero over n positions is the O(n) floor of the
 # sparse path (measured ~40ms/MB on this backend), nonzero over n/32 blocks
@@ -79,6 +101,16 @@ CAND_BLOCK = 32
 # kernels) working unchanged.
 from repro.core.packing import FP_MULT as _FP_MULT  # noqa: E402
 from repro.core.packing import WORD_SALTS as _WORD_SALTS  # noqa: E402
+
+# Plan compilation emits spans/gauges through an optional repro.obs recorder
+# (compile-time cost, LUT occupancy, automaton builds, route decisions) —
+# same default-disabled pattern as core/stream.py.
+import logging  # noqa: E402
+
+from repro.obs.recorder import Recorder, logging_sink  # noqa: E402
+
+_LOG = logging.getLogger("repro.engine")
+_DEFAULT_REC = Recorder(enabled=False, fence=False, sinks=(logging_sink(_LOG),))
 
 
 # ---------------------------------------------------------------------------
@@ -266,22 +298,50 @@ class PatternPlan:
     k: int = 0               # static: mismatch budget the plan was compiled for
     relaxed_lut: Optional[jnp.ndarray] = None  # (2^kbits,) bool <=k-reachable fps
     relaxed_bits: int = 0    # static: set-bit count of relaxed_lut (budgeting)
+    # --- dictionary scale: bucketed CSR payloads (DESIGN.md §14) -----------
+    # `kbits` above is the WIDENED width (ENGINE_KBITS + bbits) for bucketed
+    # plans; the payload bitmask/pid LUTs are replaced by a CSR keyed by the
+    # wide fingerprint: slot_off[f] .. slot_off[f+1] index id lists sorted by
+    # fingerprint, so a slot's verify gather reads CONSECUTIVE rows of the
+    # fp-sorted anchor/pattern tables (grouped gathers), and the per-slot id
+    # lists are width-packed (uint16 when P <= 65536).
+    bbits: int = 0           # static: widening over ENGINE_KBITS (0 = flat)
+    lut_pop: int = 0         # static: union-LUT popcount (budget heuristics)
+    slot_max: int = 0        # static: max slot occupancy (verify bound)
+    slot_off: Optional[jnp.ndarray] = None       # (2^kbits + 1,) int32 (EPSMb)
+    slot_ids: Optional[jnp.ndarray] = None       # (P,) uint16|int32 fp-sorted ids
+    anchors_sorted: Optional[jnp.ndarray] = None  # (P, nw) u32 fp-sorted anchors
+    c_slot_off: Optional[jnp.ndarray] = None     # (2^kbits + 1,) int32 (EPSMc)
+    c_entry_pid: Optional[jnp.ndarray] = None    # (P*stride,) int32 fp-sorted
+    c_entry_off: Optional[jnp.ndarray] = None    # (P*stride,) int32 block offset
+    c_entry_pat: Optional[jnp.ndarray] = None    # (P*stride, m) u8 grouped rows
+    automaton: Optional[Any] = None  # core.automaton.AutomatonPlan fallback
 
     def tree_flatten(self):
         return (
             (self.patterns, self.anchors, self.lut_any, self.lut_pid,
-             self.lut_bits, self.hp, self.relaxed_lut),
+             self.lut_bits, self.hp, self.relaxed_lut, self.slot_off,
+             self.slot_ids, self.anchors_sorted, self.c_slot_off,
+             self.c_entry_pid, self.c_entry_off, self.c_entry_pat,
+             self.automaton),
             (self.m, self.kbits, self.ids, self.distinct, self.k,
-             self.relaxed_bits),
+             self.relaxed_bits, self.bbits, self.lut_pop, self.slot_max),
         )
 
     @classmethod
     def tree_unflatten(cls, aux, children):
-        m, kbits, ids, distinct, k, relaxed_bits = aux
-        (patterns, anchors, lut_any, lut_pid, lut_bits, hp, relaxed) = children
+        m, kbits, ids, distinct, k, relaxed_bits, bbits, lut_pop, slot_max = aux
+        (patterns, anchors, lut_any, lut_pid, lut_bits, hp, relaxed,
+         slot_off, slot_ids, anchors_sorted, c_slot_off, c_entry_pid,
+         c_entry_off, c_entry_pat, automaton) = children
         return cls(
             m, kbits, ids, distinct, patterns, anchors, lut_any, lut_pid,
             lut_bits, hp, k=k, relaxed_lut=relaxed, relaxed_bits=relaxed_bits,
+            bbits=bbits, lut_pop=lut_pop, slot_max=slot_max,
+            slot_off=slot_off, slot_ids=slot_ids,
+            anchors_sorted=anchors_sorted, c_slot_off=c_slot_off,
+            c_entry_pid=c_entry_pid, c_entry_off=c_entry_off,
+            c_entry_pat=c_entry_pat, automaton=automaton,
         )
 
     @property
@@ -297,12 +357,21 @@ class PatternPlan:
         return "c"
 
 
+def _dict_bbits(P: int, kbits: int) -> int:
+    """Widening that targets DICT_SLOTS_PER_PATTERN slots per pattern."""
+    need = int(np.ceil(np.log2(max(2, DICT_SLOTS_PER_PATTERN * P)))) - kbits
+    return int(min(DICT_BBITS_MAX, max(0, need)))
+
+
 def compile_patterns(
     patterns: Sequence,
     *,
     kbits: int = ENGINE_KBITS,
     beta: int = EPSMC_BETA,
     k: int = 0,
+    bucket="auto",
+    automaton="auto",
+    recorder: Optional[Recorder] = None,
 ) -> Tuple[PatternPlan, ...]:
     """Group patterns by length and compile one PatternPlan per group.
 
@@ -314,81 +383,197 @@ def compile_patterns(
     fingerprint LUT covering every window fingerprint reachable under <= k
     byte substitutions, so ``match_many(..., k=k)`` can keep the candidate
     gate before verification.  k=0 plans are bit-identical to before.
+
+    ``bucket`` controls the dictionary-scale CSR compilation (DESIGN.md
+    §14): True forces bucketed plans (widened fingerprint + CSR payloads +
+    bounded verify), False forces the flat payload LUTs, and "auto" buckets
+    any group with >= DICT_BUCKET_MIN_P patterns.  Bucketed and flat plans
+    produce bit-identical match/count results at every P — only the route
+    (and its worst-case bound) differs.  ``automaton`` gates the packed
+    Aho-Corasick fallback (core/automaton.py) attached to bucketed EPSMb
+    plans: True forces a build over the WHOLE input dictionary, "auto"
+    builds it when the total pattern count reaches AUTOMATON_MIN_P and the
+    automaton's size caps hold, False skips it.
+
+    ``recorder`` (repro.obs) captures the compile-time span, per-group LUT
+    occupancy/bucket gauges, and automaton build/skip events — the plan-
+    build cost BENCH_dictionary reports next to per-dispatch throughput.
     """
     if k < 0:
         raise ValueError("mismatch budget k must be >= 0")
+    if bucket not in (True, False, "auto"):
+        raise ValueError("bucket must be True, False, or 'auto'")
+    if automaton not in (True, False, "auto"):
+        raise ValueError("automaton must be True, False, or 'auto'")
+    rec = _DEFAULT_REC if recorder is None else recorder
     groups: dict = {}
+    arrs: List[np.ndarray] = []
     for i, p in enumerate(patterns):
-        arr = np.asarray(jax.device_get(as_u8(p)))
+        arr = as_u8_np(p)
         if arr.ndim != 1 or arr.size == 0:
             raise ValueError("patterns must be non-empty 1-D byte strings")
         groups.setdefault(arr.size, []).append((i, arr))
+        arrs.append(arr)
 
     plans: List[PatternPlan] = []
-    for m in sorted(groups):
-        ids = tuple(i for i, _ in groups[m])
-        pats = np.stack([a for _, a in groups[m]])
-        P = pats.shape[0]
-        offsets = _word_offsets(m)
-        anchors = _np_pack_words(pats, offsets)
-        lut_any = np.zeros((1 << kbits,), np.bool_)
-        lut_pid = lut_bits = hp = None
-        distinct = False
-        if m < EPSMA_MAX:
-            pass  # dense byte compares; no fingerprint machinery
-        elif m < EPSMB_MAX:
-            hw = _np_window_fingerprint(anchors, kbits)  # (P,)
-            lut_any[hw] = True
-            # pattern-id payload: when every pattern owns a unique slot, a
-            # candidate position names its ONE claimed pattern and
-            # verification compares a single gathered anchor instead of all P
-            distinct = len(set(hw.tolist())) == P
-            if distinct:
-                lut_pid = np.zeros((1 << kbits,), np.int32)
-                lut_pid[hw] = np.arange(P, dtype=np.int32)
-        else:
-            # EPSMc: union LUT over the aligned-block fingerprints a true
-            # occurrence can present.  Only offsets j < stride are ever
-            # probed (the occurrence's unique "dedup" block — see
-            # _match_group_c), so only those are registered: fewer entries,
-            # fewer false positives.
-            stride = _epsmc_stride(m, beta)
-            w = np.asarray(jax.device_get(fingerprint_weights(beta))).astype(np.int64)
-            offs = np.arange(stride)
-            blocks = pats[:, offs[:, None] + np.arange(beta)[None, :]]  # (P, stride, beta)
-            h = (blocks.astype(np.int64) * w[None, None, :]).sum(-1)
-            hp = (h & ((1 << kbits) - 1)).astype(np.int32)  # (P, stride)
-            nwords = -(-P // 32)
-            lut_bits = np.zeros((1 << kbits, nwords), np.uint32)
-            for p_i in range(P):
-                bit = np.uint32(1 << (p_i % 32))
-                lut_bits[hp[p_i], p_i // 32] |= bit
-            lut_any[hp.reshape(-1)] = True
-        relaxed = None
-        relaxed_bits = 0
-        if k > 0:
-            from repro.approx.relaxed import relaxed_window_lut
-
-            relaxed = relaxed_window_lut(pats, kbits=kbits, k=k)
-            if relaxed is not None:
-                relaxed_bits = int(relaxed.sum())
-        plans.append(
-            PatternPlan(
-                m=m,
-                kbits=kbits,
-                ids=ids,
-                distinct=distinct,
-                patterns=jnp.asarray(pats),
-                anchors=jnp.asarray(anchors),
-                lut_any=jnp.asarray(lut_any),
-                lut_pid=None if lut_pid is None else jnp.asarray(lut_pid),
-                lut_bits=None if lut_bits is None else jnp.asarray(lut_bits),
-                hp=None if hp is None else jnp.asarray(hp),
-                k=k,
-                relaxed_lut=None if relaxed is None else jnp.asarray(relaxed),
-                relaxed_bits=relaxed_bits,
+    with rec.span("plan_compile", groups=len(groups), p_total=len(arrs)):
+        for m in sorted(groups):
+            ids = tuple(i for i, _ in groups[m])
+            pats = np.stack([a for _, a in groups[m]])
+            P = pats.shape[0]
+            offsets = _word_offsets(m)
+            anchors = _np_pack_words(pats, offsets)
+            bucketed = m >= EPSMA_MAX and (
+                bucket is True or (bucket == "auto" and P >= DICT_BUCKET_MIN_P)
             )
+            bbits = _dict_bbits(P, kbits) if bucketed else 0
+            kb = kbits + bbits
+            lut_any = np.zeros((1 << kb,), np.bool_)
+            lut_pid = lut_bits = hp = None
+            slot_off = slot_ids = anchors_sorted = None
+            c_slot_off = c_entry_pid = c_entry_off = c_entry_pat = None
+            slot_max = 0
+            distinct = False
+            if m < EPSMA_MAX:
+                pass  # dense byte compares; no fingerprint machinery
+            elif m < EPSMB_MAX:
+                hw = _np_window_fingerprint(anchors, kb)  # (P,)
+                lut_any[hw] = True
+                # pattern-id payload: when every pattern owns a unique slot,
+                # a candidate position names its ONE claimed pattern and
+                # verification compares one gathered anchor instead of all P
+                distinct = len(set(hw.tolist())) == P
+                if bucketed:
+                    # CSR payload: ids sorted by fingerprint; a slot's list
+                    # is a CONTIGUOUS run, so the bounded verify's j-th probe
+                    # gathers consecutive rows of the fp-sorted anchors
+                    order = np.argsort(hw, kind="stable")
+                    occ = np.bincount(hw, minlength=1 << kb)
+                    slot_off = np.zeros((1 << kb) + 1, np.int32)
+                    slot_off[1:] = np.cumsum(occ).astype(np.int32)
+                    slot_ids = order.astype(
+                        np.uint16 if P <= (1 << 16) else np.int32
+                    )
+                    anchors_sorted = anchors[order]
+                    slot_max = int(occ.max())
+                elif distinct:
+                    lut_pid = np.zeros((1 << kb,), np.int32)
+                    lut_pid[hw] = np.arange(P, dtype=np.int32)
+            else:
+                # EPSMc: union LUT over the aligned-block fingerprints a true
+                # occurrence can present.  Only offsets j < stride are ever
+                # probed (the occurrence's unique "dedup" block — see
+                # _match_group_c), so only those are registered: fewer
+                # entries, fewer false positives.
+                stride = _epsmc_stride(m, beta)
+                w = np.asarray(
+                    jax.device_get(fingerprint_weights(beta))
+                ).astype(np.int64)
+                offs = np.arange(stride)
+                blocks = pats[:, offs[:, None] + np.arange(beta)[None, :]]
+                h = (blocks.astype(np.int64) * w[None, None, :]).sum(-1)
+                hp = (h & ((1 << kb) - 1)).astype(np.int32)  # (P, stride)
+                lut_any[hp.reshape(-1)] = True
+                if bucketed:
+                    # CSR replaces the (2^k, ceil(P/32)) payload bitmask —
+                    # at P=50k that bitmask is ~800 MB; the CSR is
+                    # O(P * stride) entries with fp-grouped pattern rows
+                    keys = hp.reshape(-1)  # entry e = pid * stride + off
+                    order = np.argsort(keys, kind="stable")
+                    occ = np.bincount(keys, minlength=1 << kb)
+                    c_slot_off = np.zeros((1 << kb) + 1, np.int32)
+                    c_slot_off[1:] = np.cumsum(occ).astype(np.int32)
+                    c_entry_pid = (order // stride).astype(np.int32)
+                    c_entry_off = (order % stride).astype(np.int32)
+                    c_entry_pat = pats[c_entry_pid]
+                    slot_max = int(occ.max())
+                else:
+                    nwords = -(-P // 32)
+                    lut_bits = np.zeros((1 << kb, nwords), np.uint32)
+                    for p_i in range(P):
+                        bit = np.uint32(1 << (p_i % 32))
+                        lut_bits[hp[p_i], p_i // 32] |= bit
+            lut_pop = int(lut_any.sum())
+            relaxed = None
+            relaxed_bits = 0
+            if k > 0:
+                from repro.approx.relaxed import relaxed_window_lut
+
+                relaxed = relaxed_window_lut(pats, kbits=kb, k=k)
+                if relaxed is not None:
+                    relaxed_bits = int(relaxed.sum())
+            rec.event(
+                "plan_group", m=m, n_patterns=P, bucketed=int(bucketed),
+                bbits=bbits, kbits=kb, lut_pop=lut_pop, slot_max=slot_max,
+                occupancy=lut_pop / float(1 << kb),
+            )
+            rec.gauge(f"plan.lut_occupancy.m{m}", lut_pop / float(1 << kb))
+            rec.gauge(f"plan.buckets.m{m}", float(1 << bbits))
+            plans.append(
+                PatternPlan(
+                    m=m,
+                    kbits=kb,
+                    ids=ids,
+                    distinct=distinct,
+                    patterns=jnp.asarray(pats),
+                    anchors=jnp.asarray(anchors),
+                    lut_any=jnp.asarray(lut_any),
+                    lut_pid=None if lut_pid is None else jnp.asarray(lut_pid),
+                    lut_bits=None if lut_bits is None else jnp.asarray(lut_bits),
+                    hp=None if hp is None else jnp.asarray(hp),
+                    k=k,
+                    relaxed_lut=None if relaxed is None else jnp.asarray(relaxed),
+                    relaxed_bits=relaxed_bits,
+                    bbits=bbits,
+                    lut_pop=lut_pop,
+                    slot_max=slot_max,
+                    slot_off=None if slot_off is None else jnp.asarray(slot_off),
+                    slot_ids=None if slot_ids is None else jnp.asarray(slot_ids),
+                    anchors_sorted=(
+                        None if anchors_sorted is None
+                        else jnp.asarray(anchors_sorted)
+                    ),
+                    c_slot_off=(
+                        None if c_slot_off is None else jnp.asarray(c_slot_off)
+                    ),
+                    c_entry_pid=(
+                        None if c_entry_pid is None else jnp.asarray(c_entry_pid)
+                    ),
+                    c_entry_off=(
+                        None if c_entry_off is None else jnp.asarray(c_entry_off)
+                    ),
+                    c_entry_pat=(
+                        None if c_entry_pat is None else jnp.asarray(c_entry_pat)
+                    ),
+                )
+            )
+        # --- packed automaton fallback (core/automaton.py, DESIGN.md §14) --
+        # Built over the WHOLE input dictionary in INPUT order, so any plan
+        # subset can column-select its counts via plan.ids; attached to every
+        # bucketed EPSMb plan (the shared-path fallback consumers).
+        want_auto = automaton is True or (
+            automaton == "auto"
+            and len(arrs) >= AUTOMATON_MIN_P
+            and any(p.slot_off is not None for p in plans)
         )
+        if want_auto and any(p.slot_off is not None for p in plans):
+            from repro.core.automaton import compile_automaton
+
+            with rec.span("automaton_compile", p_total=len(arrs)):
+                auto = compile_automaton(arrs)
+            if auto is None:
+                rec.event("automaton_skipped", p_total=len(arrs))
+            else:
+                rec.event(
+                    "automaton_built", states=auto.n_states,
+                    classes=auto.n_classes, entries=auto.n_entries,
+                    out_max=auto.out_max,
+                )
+                plans = [
+                    dataclasses.replace(p, automaton=auto)
+                    if p.slot_off is not None else p
+                    for p in plans
+                ]
     return tuple(plans)
 
 
@@ -445,7 +630,7 @@ def _pattern_cache_token(p) -> bytes:
         ref, tok = ent
         if ref() is p:
             return tok
-    tok = bytes(np.asarray(jax.device_get(as_u8(p))))
+    tok = bytes(as_u8_np(p))
     try:
         if len(_DIGEST_MEMO) >= _DIGEST_MEMO_MAX:
             # drop dead entries first; fall back to clearing (rare)
@@ -460,10 +645,10 @@ def _pattern_cache_token(p) -> bytes:
 
 
 def compile_patterns_cached(
-    patterns: Sequence, *, k: int = 0
+    patterns: Sequence, *, k: int = 0, bucket="auto", automaton="auto"
 ) -> Tuple[PatternPlan, ...]:
     """compile_patterns with a small host-side memo keyed by pattern bytes
-    (and the mismatch budget k).
+    (and the compile knobs: mismatch budget k, bucket/automaton routing).
 
     The convenience wrappers (find_multi & co., the batched kernels) receive
     raw pattern stacks per call; without this, every call would pay the
@@ -471,10 +656,13 @@ def compile_patterns_cached(
     amortizes by construction.  Key construction is transfer-free on cache
     hits: a repeat call with the same (live) device arrays costs dict probes
     only, no jax.device_get (see _pattern_cache_token)."""
-    key = (k,) + tuple(_pattern_cache_token(p) for p in patterns)
+    key = (k, bucket, automaton) + tuple(
+        _pattern_cache_token(p) for p in patterns
+    )
     plans = _PLAN_CACHE.get(key)
     if plans is None:
-        plans = compile_patterns(patterns, k=k)
+        plans = compile_patterns(patterns, k=k, bucket=bucket,
+                                 automaton=automaton)
         if len(_PLAN_CACHE) >= _PLAN_CACHE_MAX:
             _PLAN_CACHE.pop(next(iter(_PLAN_CACHE)))
         _PLAN_CACHE[key] = plans
@@ -534,6 +722,32 @@ def _dense_b(index: TextIndex, plan: PatternPlan, end_min=None) -> jnp.ndarray:
     return acc
 
 
+def _expected_union_blocks(
+    B: int, n: int, plans: Sequence[PatternPlan], cblock: int = CAND_BLOCK
+) -> Tuple[int, float]:
+    """(expected candidate blocks, expected block density) from the STATIC
+    per-plan LUT popcounts — the satellite fix for the expansion budget.
+
+    The old heuristic ``(B*n*P) >> kbits`` modeled per-POSITION collisions
+    against one flat 2^17 table; it ignores (a) slot sharing (P patterns
+    occupy lut_pop <= P slots), (b) the widened per-bucket tables of
+    dictionary plans (kbits varies per plan), and (c) the block-of-C
+    aggregation that actually feeds the nonzero — at high P it both
+    over- and under-shoots by orders of magnitude, tripping the dense
+    lax.cond fallback on benign text.  The block-level expectation under a
+    uniform-fingerprint model is exact: a block of C positions survives when
+    ANY of its positions hits ANY plan's occupied slots, so the miss
+    probability is prod_g (1 - occ_g)^C with occ_g = lut_pop_g / 2^kbits_g.
+    """
+    nblk = -(-n // cblock)
+    miss = 1.0
+    for p in plans:
+        occ = min(1.0, p.lut_pop / float(1 << p.kbits))
+        miss *= (1.0 - occ) ** cblock
+    rho = 1.0 - miss
+    return int(B * nblk * rho), rho
+
+
 def _b_candidates(
     index: TextIndex,
     plan: PatternPlan,
@@ -556,7 +770,7 @@ def _b_candidates(
     # budget covers expected fingerprint collisions AND heavy-tailed true-match
     # densities (patterns sampled from the text itself light up ~1/3 of the
     # blocks before the sparse path stops paying); beyond it, dense fallback.
-    exp = (B * n * plan.n_patterns) >> plan.kbits
+    exp, _ = _expected_union_blocks(B, n, (plan,))
     budget = int(min(B * nblk, max(1024, 4 * exp + 8 * B, (B * nblk) // 3)))
     return blk_any, budget, nblk
 
@@ -665,6 +879,90 @@ def _b_verify_pid(
     return ok.astype(jnp.int32), bvec, pid
 
 
+def _automaton_counts(index: TextIndex, auto, end_min=None) -> jnp.ndarray:
+    """(B, N_input) exact counts via the packed Aho-Corasick fallback —
+    linear in n regardless of candidate density (DESIGN.md §14)."""
+    from repro.core.automaton import count_automaton
+
+    return count_automaton(index.text, index.lengths, auto, end_min=end_min)
+
+
+def _b_count_rows_csr(
+    index: TextIndex,
+    plan: PatternPlan,
+    rows_packed,
+    bvec,
+    starts,
+    live,
+    row_bank: FingerprintBank,
+    end_min=None,
+) -> jnp.ndarray:
+    """Bounded CSR verify on gathered candidate rows (bucketed EPSMb).
+
+    Each candidate position probes its wide-fingerprint slot's id list
+    (slot_off CSR) and walks at most ``slot_max`` entries; the j-th probe
+    gathers CONSECUTIVE rows of the fp-sorted anchor table (the grouped
+    gather the CSR sort buys).  O(nb * C * slot_max * nw) — independent of
+    P, unlike the flat all-patterns verify's O(nb * C * P * nw)."""
+    B = index.text.shape[0]
+    C = starts.shape[1]
+    P = plan.n_patterns
+    h = row_bank.window_fp(plan.m, plan.kbits)[:, :C]
+    base = plan.slot_off[h]
+    cnt = plan.slot_off[h + 1] - base
+    ok_pos = _start_gate(index, plan.m, starts, bvec, end_min) & live[:, None]
+    words = [
+        rows_packed[:, o : o + C] for o in _word_offsets(plan.m)
+    ]
+    counts = jnp.zeros((B, P), jnp.int32)
+    for j in range(plan.slot_max):
+        idx = jnp.minimum(base + j, P - 1)
+        sel = plan.anchors_sorted[idx]  # (nb, C, nw) — contiguous per slot
+        ok = (j < cnt) & ok_pos
+        for i in range(len(words)):
+            ok = ok & (words[i] == sel[..., i])
+        pid = plan.slot_ids[idx].astype(jnp.int32)
+        counts = counts.at[bvec[:, None], pid].add(
+            ok.astype(jnp.int32), mode="drop"
+        )
+    return counts
+
+
+def _count_b_slot_dense(
+    index: TextIndex,
+    plan: PatternPlan,
+    bank: Optional[FingerprintBank] = None,
+    end_min=None,
+) -> jnp.ndarray:
+    """Slot-dense bounded verify: EVERY position checks its slot's id list.
+
+    This replaces the flat path's O(n * P) dense fallback for bucketed
+    plans: cost is O(n * slot_max * nw) with slot_max a COMPILE-TIME
+    constant of the pattern set — adversarial text can flood the candidate
+    stream but cannot change the per-position bound, so collision floods
+    degrade to a linear scan instead of the quadratic verify."""
+    B, n = index.text.shape
+    P = plan.n_patterns
+    if bank is None:
+        bank = FingerprintBank(index.packed)
+    h = bank.window_fp(plan.m, plan.kbits)  # (B, n)
+    base = plan.slot_off[h]
+    cnt = plan.slot_off[h + 1] - base
+    valid = _valid_starts(index, plan.m, end_min)
+    words = [shift_left(index.packed, o) for o in _word_offsets(plan.m)]
+    counts = jnp.zeros((B, P), jnp.int32)
+    bix = jnp.arange(B, dtype=jnp.int32)[:, None]
+    for j in range(plan.slot_max):
+        idx = jnp.minimum(base + j, P - 1)
+        sel = plan.anchors_sorted[idx]  # (B, n, nw)
+        ok = (j < cnt) & valid
+        for i in range(len(words)):
+            ok = ok & (words[i] == sel[..., i])
+        pid = plan.slot_ids[idx].astype(jnp.int32)
+        counts = counts.at[bix, pid].add(ok.astype(jnp.int32), mode="drop")
+    return counts
+
+
 # Sparse-vs-dense cliff for the EPSMb count path: the sparse machinery pays
 # once the dense (B, P, n) mask would fall out of cache during the reduce
 # (measured ~8 MB of mask on this backend); below it, or for tiny pattern
@@ -689,6 +987,39 @@ def _count_group_b(
 ) -> jnp.ndarray:
     B, n = index.text.shape
     P = plan.n_patterns
+    if plan.slot_off is not None:
+        # bucketed (dictionary-scale) plan: sparse CSR verify with the
+        # bounded slot-dense scan as BOTH the static dense-density route and
+        # the lax.cond overflow fallback — never the O(n * P) dense compare.
+        if bank is None:
+            bank = FingerprintBank(index.packed)
+        _, rho = _expected_union_blocks(B, n, (plan,))
+        if (
+            not _sparse_b_eligible(index, plan)
+            or rho > DENSE_ROUTE_RHO
+            or plan.slot_max > SLOT_VERIFY_CAP
+        ):
+            return _count_b_slot_dense(index, plan, bank, end_min)
+        blk_any, budget, nblk = _b_candidates(index, plan, bank, end_min)
+
+        def sparse_csr(_):
+            rows_packed, bvec, bstart, live = _gather_candidate_rows(
+                index, plan.m, blk_any, budget, nblk
+            )
+            starts = (
+                bstart[:, None] + jnp.arange(CAND_BLOCK, dtype=jnp.int32)[None, :]
+            )
+            return _b_count_rows_csr(
+                index, plan, rows_packed, bvec, starts, live,
+                FingerprintBank(rows_packed), end_min,
+            )
+
+        return lax.cond(
+            blk_any.sum(dtype=jnp.int32) <= budget,
+            sparse_csr,
+            lambda _: _count_b_slot_dense(index, plan, bank, end_min),
+            None,
+        )
     if not _sparse_b_eligible(index, plan):
         return _dense_count(index, plan, _dense_b, end_min)
     blk_any, budget, nblk = _b_candidates(index, plan, bank, end_min)
@@ -721,6 +1052,64 @@ def _count_group_b(
     )
 
 
+@dataclasses.dataclass(frozen=True)
+class _SharedRoute:
+    """Static (trace-time) routing decision for one shared EPSMb set."""
+
+    budget: int            # candidate-block budget for the lax.cond gate
+    exp_blocks: int        # expected candidate blocks (static model)
+    rho: float             # expected candidate-block density
+    static_fallback: bool  # skip the sparse machinery entirely
+    automaton: Any         # AutomatonPlan to fall back to, or None
+    kind: str              # fallback kind: "automaton"|"slot_dense"|"dense"
+
+
+def _shared_b_route(
+    index: TextIndex, plans: Sequence[PatternPlan]
+) -> _SharedRoute:
+    """One routing decision shared by _count_groups_b_shared and
+    route_probe, so the dispatcher and the probe cannot disagree.
+
+    Everything here is host-static (LUT popcounts, slot_max, expected
+    density) — the only RUNTIME signal is the measured union block count,
+    which the caller compares against ``budget`` inside lax.cond."""
+    B, n = index.text.shape
+    nblk = -(-n // CAND_BLOCK)
+    exp, rho = _expected_union_blocks(B, n, plans)
+    # Tighter budget than the per-group path's (B*nblk)//3 heavy-tail slack:
+    # every verification op here is paid G-groups-deep on the shared rows,
+    # so over-provisioning is G times as expensive, while the bounded
+    # fallback below still guarantees exactness on overflow.  2x the
+    # expected-collision mass separates textures at dictionary scale, where
+    # rho is pinned near DICT_SLOTS_PER_PATTERN/2^bbits-induced ~0.3:
+    # average text measures ~exp blocks (inside budget -> sparse gather),
+    # while an adversarial fingerprint flood measures ~all blocks, ~3x exp
+    # (overflow -> automaton / bounded slot-dense).  A 16x multiplier here
+    # would exceed the total block count whenever rho > 1/16 and the
+    # measured-density trigger could never fire.  The 8*B + nblk/16 floor
+    # keeps benign low-P workloads (tiny exp, bursty real text) sparse.
+    budget = int(
+        min(B * nblk, max(4096, 2 * exp + 8 * B + (B * nblk) // 16))
+    )
+    auto = next(
+        (p.automaton for p in plans if p.automaton is not None), None
+    )
+    slot_cap_hit = any(
+        p.slot_off is not None and p.slot_max > SLOT_VERIFY_CAP for p in plans
+    )
+    static_fallback = (slot_cap_hit and auto is not None) or rho > DENSE_ROUTE_RHO
+    if auto is not None:
+        kind = "automaton"
+    elif any(p.slot_off is not None for p in plans):
+        kind = "slot_dense"
+    else:
+        kind = "dense"
+    return _SharedRoute(
+        budget=budget, exp_blocks=exp, rho=rho,
+        static_fallback=static_fallback, automaton=auto, kind=kind,
+    )
+
+
 def _count_groups_b_shared(
     index: TextIndex,
     plans: Sequence[PatternPlan],
@@ -749,6 +1138,31 @@ def _count_groups_b_shared(
     C = CAND_BLOCK
     nblk = -(-n // C)
     max_m = max(p.m for p in plans)
+    route = _shared_b_route(index, plans)
+
+    def fallback(_):
+        # Route hierarchy (DESIGN.md §14): packed automaton when any shared
+        # plan carries one (it covers the WHOLE input dictionary, so every
+        # plan column-selects via ids — linear-time, density-independent);
+        # else slot-dense bounded verify for bucketed plans and the classic
+        # dense compare for flat ones.
+        auto = route.automaton
+        if auto is not None:
+            ca = _automaton_counts(index, auto, end_min)
+            return jnp.concatenate(
+                [ca[:, np.asarray(p.ids, np.int64)] for p in plans], axis=1
+            )
+        outs = []
+        for p in plans:
+            if p.slot_off is not None:
+                outs.append(_count_b_slot_dense(index, p, bank, end_min))
+            else:
+                outs.append(_dense_count(index, p, _dense_b, end_min))
+        return jnp.concatenate(outs, axis=1)
+
+    if route.static_fallback:
+        return fallback(None)
+
     union = None
     for p in plans:
         h = bank.window_fp(p.m, p.kbits)
@@ -759,18 +1173,10 @@ def _count_groups_b_shared(
             .any(-1)
         )
         union = blk if union is None else union | blk
-    exp = sum((B * n * p.n_patterns) >> p.kbits for p in plans)
-    # Tighter budget than the per-group path's (B*nblk)//3 heavy-tail slack:
-    # every verification op here is paid G-groups-deep on the shared rows,
-    # so over-provisioning is G times as expensive, while the dense fallback
-    # below still guarantees exactness when a pathological pattern set
-    # overflows.  16x the expected-collision mass (vs 4x per-group) plus an
-    # nblk/16 floor keeps benign extracted-pattern workloads sparse.
-    budget = int(min(B * nblk, max(4096, 16 * exp + 8 * B, (B * nblk) // 16)))
 
     def sparse(_):
         rows_packed, bvec, bstart, live = _gather_candidate_rows(
-            index, max_m, union, budget, nblk
+            index, max_m, union, route.budget, nblk
         )
         row_bank = FingerprintBank(rows_packed)
         starts = bstart[:, None] + jnp.arange(C, dtype=jnp.int32)[None, :]
@@ -778,7 +1184,15 @@ def _count_groups_b_shared(
         for p in plans:
             in_row = _start_gate(index, p.m, starts, bvec, end_min)
             ok_pos = in_row & live[:, None]
-            if p.distinct:
+            if p.slot_off is not None:
+                # bounded CSR verify on the shared rows (dictionary plans)
+                outs.append(
+                    _b_count_rows_csr(
+                        index, p, rows_packed, bvec, starts, live,
+                        row_bank, end_min,
+                    )
+                )
+            elif p.distinct:
                 # pid fast path on the shared rows: O(nb * C) per group
                 h = row_bank.window_fp(p.m, p.kbits)[:, :C]
                 pid = p.lut_pid[h]
@@ -810,12 +1224,9 @@ def _count_groups_b_shared(
                 )
         return jnp.concatenate(outs, axis=1)
 
-    def dense(_):
-        return jnp.concatenate(
-            [_dense_count(index, p, _dense_b, end_min) for p in plans], axis=1
-        )
-
-    return lax.cond(union.sum(dtype=jnp.int32) <= budget, sparse, dense, None)
+    return lax.cond(
+        union.sum(dtype=jnp.int32) <= route.budget, sparse, fallback, None
+    )
 
 
 # Fallback for EPSMc overflow: dense shifted byte compares — O(m) passes but
@@ -830,15 +1241,30 @@ def _c_candidates(index: TextIndex, plan: PatternPlan):
     """Probe the union LUT at the strided inspected blocks (paper Fig. 1
     bottom, many patterns at once).  Every occurrence has exactly ONE
     inspected block with offset j < stride inside its window (the dedup
-    block), so candidates are found — and counted — exactly once."""
+    block), so candidates are found — and counted — exactly once.
+
+    Bucketed plans fingerprint at the WIDENED kbits, which the TextIndex's
+    shared block_fp (built at ENGINE_KBITS) cannot serve — those recompute
+    the strided blocks' wide fingerprints from the text (O(B * G * beta)
+    extra work, bought back many times over by the bounded CSR verify)."""
     beta = EPSMC_BETA
     stride = _epsmc_stride(plan.m, beta)
     step = stride // beta
-    ht = index.block_fp[:, ::step]  # (B, G) — strided view, no gather
+    if plan.bbits > 0:
+        B_, n_ = index.text.shape
+        nb = n_ // beta
+        blocks = index.text[:, : nb * beta].reshape(B_, nb, beta)
+        ht = hash_blocks(blocks, fingerprint_weights(beta), plan.kbits)[
+            :, ::step
+        ]
+    else:
+        ht = index.block_fp[:, ::step]  # (B, G) — strided view, no gather
     cand = plan.lut_any[ht]
     B, G = cand.shape
     noff_used = min(stride, plan.m - beta + 1)
-    exp = (B * G * plan.n_patterns * noff_used) >> plan.kbits
+    # block-level expectation from the static popcount (see
+    # _expected_union_blocks): each inspected block is ONE probe
+    exp = int(B * G * min(1.0, plan.lut_pop / float(1 << plan.kbits)))
     budget = int(min(max(B * G, 1), max(64, 4 * exp + 8 * B)))
     return ht, cand, stride, noff_used, budget
 
@@ -884,6 +1310,68 @@ def _c_verify(index, plan, ht, cand, stride, noff_used, budget, end_min=None):
     return ok_all, b_all, st_all
 
 
+def _c_verify_csr(
+    index, plan, ht, cand, stride, noff_used, budget, end_min=None
+):
+    """Bounded CSR verify for bucketed EPSMc plans (DESIGN.md §14).
+
+    The flat payload bitmask tests every candidate block against all P
+    patterns at all < stride offsets — O(nb * P * stride) compares and an
+    O(2^k * P / 32) bitmask that reaches ~800 MB at P = 50k.  Here a
+    candidate block's wide fingerprint names a CSR slot whose entries are
+    exactly the (pattern, offset) pairs that registered it, so the verify
+    is O(nb * slot_max * m) with slot_max a COMPILE-TIME constant:
+    adversarial text can flood candidates but cannot change the per-block
+    bound.  Each true occurrence is tested at exactly one (block, entry)
+    pair — its unique dedup block and its registered offset — so counts
+    stay bit-identical to the flat path.
+
+    Returns per-entry (ok, pid, b, start) vectors of length
+    slot_max * nb for scatter-add/scatter-max joins.
+    """
+    B, n = index.text.shape
+    m = plan.m
+    G = cand.shape[1]
+    (flat,) = jnp.nonzero(cand.reshape(-1), size=budget, fill_value=B * G)
+    live = flat < B * G
+    flat = jnp.where(live, flat, 0)
+    bvec = flat // G
+    bsel = (flat % G) * stride  # inspected block start
+    front = noff_used - 1
+    span = front + m
+    t_pad = jnp.pad(index.text, ((0, 0), (front, span)))
+    rows = t_pad[bvec[:, None], bsel[:, None] + jnp.arange(span)]  # (nb, span)
+    h = ht.reshape(-1)[flat]
+    base = plan.c_slot_off[h]
+    cnt = plan.c_slot_off[h + 1] - base
+    E = plan.c_entry_pid.shape[0]
+    oks, pids, sts = [], [], []
+    for j in range(plan.slot_max):
+        idx = jnp.minimum(base + j, E - 1)
+        e_live = live & (j < cnt)
+        pid = plan.c_entry_pid[idx]
+        off = plan.c_entry_off[idx]
+        pat = plan.c_entry_pat[idx]  # (nb, m)
+        win = jnp.take_along_axis(
+            rows, (front - off)[:, None] + jnp.arange(m)[None, :], axis=1
+        )
+        st = bsel - off
+        in_row = (st >= 0) & (st <= index.lengths[bvec] - m)
+        if end_min is not None:
+            in_row = in_row & (
+                st + (m - 1) >= jnp.asarray(end_min, jnp.int32)
+            )
+        ok = e_live & in_row & jnp.all(win == pat, axis=-1)
+        oks.append(ok)
+        pids.append(pid)
+        sts.append(jnp.where(ok, st, n))
+    ok_all = jnp.concatenate(oks)        # (slot_max * nb,)
+    pid_all = jnp.concatenate(pids)
+    st_all = jnp.concatenate(sts)
+    b_all = jnp.concatenate([bvec] * plan.slot_max)
+    return ok_all, pid_all, b_all, st_all
+
+
 def _match_group_c(
     index: TextIndex,
     plan: PatternPlan,
@@ -896,6 +1384,31 @@ def _match_group_c(
     if index.block_fp.shape[1] == 0:
         return _dense_c(index, plan, end_min)
     ht, cand, stride, noff_used, budget = _c_candidates(index, plan)
+
+    if plan.c_slot_off is not None:
+        # bucketed: the bounded CSR verify IS the overflow path too — run
+        # on every inspected block (budget B * G) instead of densifying,
+        # keeping the adversarial bound O(B * G * slot_max * m)
+        def sparse_csr(_):
+            ok, pid, b_all, st_all = _c_verify_csr(
+                index, plan, ht, cand, stride, noff_used, budget, end_min
+            )
+            out = jnp.zeros((B, P, n + 1), jnp.bool_)
+            out = out.at[b_all, pid, st_all].max(ok, mode="drop")
+            return out[:, :, :n]
+
+        def full_csr(_):
+            ok, pid, b_all, st_all = _c_verify_csr(
+                index, plan, ht, jnp.ones_like(cand), stride, noff_used,
+                cand.size, end_min,
+            )
+            out = jnp.zeros((B, P, n + 1), jnp.bool_)
+            out = out.at[b_all, pid, st_all].max(ok, mode="drop")
+            return out[:, :, :n]
+
+        return lax.cond(
+            cand.sum(dtype=jnp.int32) <= budget, sparse_csr, full_csr, None
+        )
 
     def sparse(_):
         ok, b_all, st_all = _c_verify(
@@ -926,6 +1439,30 @@ def _count_group_c(
     if index.block_fp.shape[1] == 0:
         return _dense_c(index, plan, end_min).sum(-1, dtype=jnp.int32)
     ht, cand, stride, noff_used, budget = _c_candidates(index, plan)
+
+    if plan.c_slot_off is not None:
+        def sparse_csr(_):
+            ok, pid, b_all, _ = _c_verify_csr(
+                index, plan, ht, cand, stride, noff_used, budget, end_min
+            )
+            counts = jnp.zeros((B, plan.n_patterns), jnp.int32)
+            return counts.at[b_all, pid].add(
+                ok.astype(jnp.int32), mode="drop"
+            )
+
+        def full_csr(_):
+            ok, pid, b_all, _ = _c_verify_csr(
+                index, plan, ht, jnp.ones_like(cand), stride, noff_used,
+                cand.size, end_min,
+            )
+            counts = jnp.zeros((B, plan.n_patterns), jnp.int32)
+            return counts.at[b_all, pid].add(
+                ok.astype(jnp.int32), mode="drop"
+            )
+
+        return lax.cond(
+            cand.sum(dtype=jnp.int32) <= budget, sparse_csr, full_csr, None
+        )
 
     def sparse(_):
         ok, b_all, _ = _c_verify(
@@ -1060,6 +1597,83 @@ def count_many(
 
             outs[i] = counting.count_group_approx(index, p, kk, bank, end_min)
     return jnp.concatenate(outs, axis=1)
+
+
+def route_probe(
+    index: TextIndex,
+    plans: Sequence[PatternPlan],
+    *,
+    k: Optional[int] = None,
+    end_min: Optional[int] = None,
+    shared: bool = True,
+    recorder: Optional[Recorder] = None,
+) -> dict:
+    """Report WHICH route count_many would take for this (index, plans)
+    pair without running the verification — the observability half of the
+    dictionary-scale dispatcher (DESIGN.md §14, BENCH_dictionary's "route"
+    column).
+
+    Uses the same _shared_b_route decision and the same union-block
+    measurement as _count_groups_b_shared, so the probe and the dispatcher
+    cannot disagree.  Emits a ``fallback_route`` event on ``recorder``
+    (repro.obs) with the chosen route, measured candidate blocks, budget,
+    and density.  Host-synchronizing (materializes the union popcount) —
+    a diagnostic, not a hot-path call.
+    """
+    rec = _DEFAULT_REC if recorder is None else recorder
+    B, n = index.text.shape
+    C = CAND_BLOCK
+    nblk = -(-n // C)
+    shared_plans = [
+        p
+        for p in plans
+        if shared
+        and _effective_k(p, k) == 0
+        and p.regime == "b"
+        and _sparse_b_eligible(index, p)
+    ]
+    if not shared_plans:
+        info = {
+            "route": "per_group",
+            "kind": "none",
+            "blocks": 0,
+            "budget": 0,
+            "total_blocks": B * nblk,
+            "density": 0.0,
+            "rho": 0.0,
+            "static": True,
+        }
+        rec.event("fallback_route", **info)
+        return info
+    route = _shared_b_route(index, shared_plans)
+    blocks = 0
+    if not route.static_fallback:
+        bank = FingerprintBank(index.packed)
+        union = None
+        for p in shared_plans:
+            h = bank.window_fp(p.m, p.kbits)
+            cand = p.lut_any[h] & _valid_starts(index, p.m, end_min)
+            blk = (
+                jnp.pad(cand, ((0, 0), (0, nblk * C - n)))
+                .reshape(B, nblk, C)
+                .any(-1)
+            )
+            union = blk if union is None else union | blk
+        blocks = int(union.sum(dtype=jnp.int32))
+    overflow = route.static_fallback or blocks > route.budget
+    info = {
+        "route": route.kind if overflow else "sparse",
+        "kind": route.kind,
+        "blocks": blocks,
+        "budget": route.budget,
+        "exp_blocks": route.exp_blocks,
+        "total_blocks": B * nblk,
+        "density": blocks / float(max(1, B * nblk)),
+        "rho": route.rho,
+        "static": bool(route.static_fallback),
+    }
+    rec.event("fallback_route", **info)
+    return info
 
 
 def any_many(

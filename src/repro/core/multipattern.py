@@ -103,11 +103,25 @@ class PatternSet:
     since every query below flows through the engine's per-plan default.
     """
 
-    def __init__(self, patterns: Sequence, *, k: int = 0):
+    def __init__(
+        self,
+        patterns: Sequence,
+        *,
+        k: int = 0,
+        bucket="auto",
+        automaton="auto",
+        recorder=None,
+    ):
         if not patterns:
             raise ValueError("empty PatternSet")
         self.k = int(k)
-        self.plans = engine.compile_patterns(patterns, k=self.k)
+        # bucket/automaton/recorder pass straight through to the engine's
+        # dictionary-scale plan compiler (DESIGN.md §14) — the defaults keep
+        # small sets on the flat payload LUTs, bit-identically.
+        self.plans = engine.compile_patterns(
+            patterns, k=self.k, bucket=bucket, automaton=automaton,
+            recorder=recorder,
+        )
         self.order = engine.plan_order(self.plans)
         # group-major (seed-compatible) order of the original patterns
         self.groups = {p.m: p.patterns for p in self.plans}

@@ -30,6 +30,23 @@ def as_u8(x) -> jnp.ndarray:
     return arr
 
 
+def as_u8_np(x) -> np.ndarray:
+    """Host-side sibling of :func:`as_u8`: coerce to a NUMPY uint8 array
+    without ever touching a device.  Plan compilation is a host loop over
+    up to ~10^5 patterns — one jnp round-trip per pattern is ~16s of pure
+    device_put at dictionary scale, vs milliseconds staying on host."""
+    if isinstance(x, str):
+        x = x.encode("utf-8", errors="surrogateescape")
+    if isinstance(x, (bytes, bytearray, memoryview)):
+        return np.frombuffer(bytes(x), dtype=np.uint8)
+    if isinstance(x, np.ndarray):
+        return x if x.dtype == np.uint8 else x.astype(np.uint8)
+    import jax
+
+    arr = np.asarray(jax.device_get(x))
+    return arr if arr.dtype == np.uint8 else arr.astype(np.uint8)
+
+
 def shift_left(x: jnp.ndarray, j: int) -> jnp.ndarray:
     """Return y with y[i] = x[i + j] (zero padded at the tail).
 

@@ -1,0 +1,15 @@
+"""Packed Aho-Corasick transition-scan kernel (dictionary fallback path)."""
+
+from repro.kernels.acscan.acscan import (
+    ACSCAN_VMEM_BUDGET,
+    LANE_TILE,
+    acscan_eligible,
+    acscan_states,
+)
+
+__all__ = [
+    "ACSCAN_VMEM_BUDGET",
+    "LANE_TILE",
+    "acscan_eligible",
+    "acscan_states",
+]

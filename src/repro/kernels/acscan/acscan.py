@@ -1,0 +1,74 @@
+"""Pallas transition-scan kernel for the packed Aho-Corasick fallback.
+
+One program per tile of lanes; each program stages its (LANE_TILE, T) class
+windows plus the whole flat transition table, then walks the T (static,
+~SEG + max_m - 1) steps with a vectorized gather per step — the on-chip
+mirror of ``core.automaton.automaton_states``'s lax.scan, emitting only the
+SEG owned states per lane (the warmup prefix is consumed, not written).
+
+The table gather is the kernel's whole inner loop, so eligibility is a
+VMEM question: ``acscan_eligible`` bounds the resident bytes (table + class
+windows + state registers).  On real TPU hardware the per-step gather
+lowers to a dynamic vector load; interpret=True validates the logic on CPU
+(tests/test_dictionary.py pins it bit-identical to the lax.scan path, which
+is itself pinned to the sequential reference in ref.py).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANE_TILE = 256
+# VMEM ceiling for the staged state (table + windows + registers); the
+# megascan budget discipline (kernels/megascan/ops.py).
+ACSCAN_VMEM_BUDGET = 12 << 20
+
+
+def acscan_eligible(n_cells: int, T: int, lane_tile: int = LANE_TILE) -> bool:
+    resident = 4 * n_cells + 4 * lane_tile * T + 8 * lane_tile
+    return resident <= ACSCAN_VMEM_BUDGET
+
+
+def _ac_kernel(win_ref, delta_ref, out_ref, *, T: int, seg: int, nclass: int):
+    d = delta_ref[...]  # (n_states * nclass,) int32
+    s = jnp.zeros((win_ref.shape[0],), jnp.int32)
+    ov = T - seg
+    for t in range(T):  # T is static and small (seg + max_m - 1)
+        s = jnp.take(d, s * nclass + win_ref[:, t], axis=0)
+        if t >= ov:
+            out_ref[:, t - ov] = s
+
+
+@functools.partial(
+    jax.jit, static_argnames=("nclass", "seg", "lane_tile", "interpret")
+)
+def acscan_states(
+    win: jnp.ndarray,
+    delta: jnp.ndarray,
+    nclass: int,
+    seg: int,
+    *,
+    lane_tile: int = LANE_TILE,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """(L, T) int32 lane class-windows -> (L, seg) owned automaton states."""
+    L, T = win.shape
+    ntiles = max(1, -(-L // lane_tile))
+    pad = ntiles * lane_tile - L
+    win_p = jnp.pad(win, ((0, pad), (0, 0)))
+    out = pl.pallas_call(
+        functools.partial(_ac_kernel, T=T, seg=seg, nclass=nclass),
+        grid=(ntiles,),
+        in_specs=[
+            pl.BlockSpec((lane_tile, T), lambda i: (i, 0)),
+            pl.BlockSpec(delta.shape, lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((lane_tile, seg), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((ntiles * lane_tile, seg), jnp.int32),
+        interpret=interpret,
+    )(win_p, delta)
+    return out[:L]

@@ -1,0 +1,43 @@
+"""Sequential Aho-Corasick reference: the oracle for the packed scan.
+
+``ac_states_ref`` is the textbook one-transition-per-byte scan (numpy, host
+loop) — exactly the computation ``core.automaton.automaton_states`` claims
+to reproduce with its overlapped parallel lanes.  tests/test_dictionary.py
+pins the two bit-identical; that equality IS the proof that the
+max_m-bounded warmup re-derivation reaches the true sequential state.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+def ac_states_ref(text_row: np.ndarray, classes, delta, n_classes: int):
+    """(n,) int32 state after consuming each byte of ONE text row."""
+    cls = np.asarray(classes, np.int64)[np.asarray(text_row, np.uint8)]
+    d = np.asarray(delta, np.int64).reshape(-1, n_classes)
+    out = np.zeros(cls.shape[0], np.int32)
+    s = 0
+    for i, c in enumerate(cls):
+        s = d[s, c]
+        out[i] = s
+    return out
+
+
+def count_ref(text_row: np.ndarray, length: int, patterns) -> np.ndarray:
+    """Naive per-pattern sliding-window counts over one row (oracle)."""
+    t = np.asarray(text_row, np.uint8)[: int(length)]
+    out = np.zeros(len(patterns), np.int64)
+    for i, p in enumerate(patterns):
+        if isinstance(p, (bytes, bytearray, str)):
+            p = np.frombuffer(
+                p.encode() if isinstance(p, str) else p, np.uint8
+            )
+        else:
+            p = np.asarray(p, np.uint8)
+        m = p.shape[0]
+        if m > t.shape[0]:
+            continue
+        win = np.lib.stride_tricks.sliding_window_view(t, m)
+        out[i] = int((win == p[None, :]).all(-1).sum())
+    return out.astype(np.int32)

@@ -32,6 +32,12 @@ from .megascan import DEFAULT_TILE, megascan_pallas
 # scratch.  Exceeding it returns spec=None -> pure-JAX fused fallback.
 VMEM_BUDGET = 12 << 20
 
+# Per-group pattern ceiling: the in-kernel verify stages the full (P, m)
+# pattern matrix and walks all P rows per candidate, so dictionary-scale
+# groups (DESIGN.md §14) belong on the engine's bounded CSR / automaton
+# routes, not in the megakernel.  Above this, spec=None -> fused fallback.
+MEGA_P_MAX = 512
+
 
 @dataclasses.dataclass(frozen=True)
 class GroupSpec:
@@ -111,6 +117,12 @@ def build_mega_spec(
         kk = _effective_k(plan, k)
         P, m = plan.n_patterns, plan.m
         if m > tile - PACK + 1:
+            return None
+        if P > MEGA_P_MAX:
+            return None
+        if plan.regime == "c" and kk == 0 and plan.lut_bits is None:
+            # bucketed EPSMc plan: its payload is the CSR entry lists, not
+            # the lut_bits bitmask the kernel's 'c' matcher consumes
             return None
         if kk > 0:
             if kk > 127:  # int8 accumulator clamp ceiling

@@ -1,0 +1,409 @@
+"""Dictionary-scale matching (DESIGN.md §14): partitioned union-LUTs,
+CSR payloads, and the packed Aho-Corasick fallback.
+
+The contract under test is BIT-IDENTITY: a bucketed plan set must produce
+exactly the flat plan set's counts/masks at every P, on every route
+(sparse CSR, slot-dense, automaton, streaming seams, sharded seams) —
+only the cost model may differ.  The adversarial tests additionally pin
+that a fingerprint flood reroutes (measured density trigger) without
+changing a single count.
+
+The chaos CI job re-runs the FAULT_SEEDS-parametrized tests below with
+extra seeds (FAULT_SEEDS=0,1,2,... like tests/test_fault_injection.py).
+"""
+
+import os
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.core import baselines, engine
+from repro.core.automaton import (
+    compile_automaton,
+    automaton_states,
+    count_automaton,
+)
+from repro.core.multipattern import PatternSet
+from repro.core.stream import StreamScanner
+from repro.core.shard_stream import ShardedStreamScanner
+from repro.kernels.acscan.ref import ac_states_ref, count_ref
+from repro.kernels.megascan import build_mega_spec
+from repro.obs.recorder import Recorder
+
+from conftest import make_text
+
+FAULT_SEEDS = [int(s) for s in os.environ.get("FAULT_SEEDS", "0,1").split(",")]
+
+
+def _dict_patterns(rng, P, m, sigma=256):
+    """P distinct random patterns of length m."""
+    pats = rng.randint(0, sigma, size=(P * 2, m)).astype(np.uint8)
+    pats = np.unique(pats, axis=0)
+    assert pats.shape[0] >= P
+    return [p for p in pats[:P]]
+
+
+def _planted_text(rng, pats, n, sigma=256, every=7):
+    """Random text with every ``every``-th pattern planted at a fixed spot."""
+    t = make_text(rng, n, sigma)
+    for i in range(0, len(pats), every):
+        m = len(pats[i])
+        pos = (i * 131) % (n - m)
+        t[pos : pos + m] = pats[i]
+    return t
+
+
+def _flood_text(pats, n):
+    """Adversarial texture: the dictionary tiled end to end — every window
+    at a pattern boundary probes a REGISTERED fingerprint, so candidate
+    density saturates while the match set stays exactly countable."""
+    m = len(pats[0])
+    reps = [np.asarray(pats[i % len(pats)]) for i in range(n // m + 1)]
+    return np.concatenate(reps)[:n]
+
+
+def _counts(idx, plans, **kw):
+    return np.asarray(engine.count_many(idx, plans, **kw))
+
+
+# ---------------------------------------------------------------------------
+# bucketed == flat bit-identity across P x m x k
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("m", list(range(2, 17)))
+@pytest.mark.parametrize("k", [0, 1])
+def test_bucketed_equals_flat_small_p(rng, m, k):
+    """P=32 (below DICT_BUCKET_MIN_P): bucket=True must still be
+    bit-identical to the flat plans, for every regime and k."""
+    pats = _dict_patterns(rng, 32, m, sigma=8)
+    text = _planted_text(rng, pats, 2048, sigma=8, every=3)
+    idx = engine.build_index(text)
+    flat = engine.compile_patterns(pats, k=k, bucket=False, automaton=False)
+    buck = engine.compile_patterns(pats, k=k, bucket=True, automaton=False)
+    np.testing.assert_array_equal(
+        _counts(idx, flat), _counts(idx, buck), err_msg=f"m={m} k={k}"
+    )
+    np.testing.assert_array_equal(
+        np.asarray(engine.match_many(idx, flat)),
+        np.asarray(engine.match_many(idx, buck)),
+        err_msg=f"m={m} k={k} (match)",
+    )
+
+
+@pytest.mark.parametrize("m", [2, 5, 8, 15])
+@pytest.mark.parametrize("k", [0, 1])
+def test_bucketed_equals_flat_p1000(rng, m, k):
+    """P=1000 (auto-bucketed): counts equal the flat plans and, for the
+    extracted patterns, the naive oracle."""
+    pats = _dict_patterns(rng, 1000, m)
+    text = _planted_text(rng, pats, 4096)
+    idx = engine.build_index(text)
+    flat = engine.compile_patterns(pats, k=k, bucket=False, automaton=False)
+    buck = engine.compile_patterns(pats, k=k)
+    if m >= 4:  # EPSMa groups never bucket
+        assert any(
+            p.slot_off is not None or p.c_slot_off is not None for p in buck
+        )
+    cf, cb = _counts(idx, flat), _counts(idx, buck)
+    np.testing.assert_array_equal(cf, cb, err_msg=f"m={m} k={k}")
+    if k == 0:
+        order = engine.plan_order(buck)
+        for row in range(0, 1000, 97):
+            pid = order[row]
+            assert cb[0, row] == baselines.naive_np(text, pats[pid]).sum()
+
+
+def test_bucketed_equals_flat_p10000(rng):
+    """P=10k mixed-length dictionary, one dispatch, vs the flat plans."""
+    pats = _dict_patterns(rng, 5000, 8) + _dict_patterns(rng, 5000, 16)
+    text = _planted_text(rng, pats, 1 << 14, every=11)
+    idx = engine.build_index(text)
+    flat = engine.compile_patterns(pats, bucket=False, automaton=False)
+    buck = engine.compile_patterns(pats)
+    bb = [p for p in buck if p.slot_off is not None]
+    assert bb and bb[0].bbits > 0, "P=5k groups must widen the fingerprint"
+    assert bb[0].automaton is not None, "dictionary scale builds the automaton"
+    np.testing.assert_array_equal(_counts(idx, flat), _counts(idx, buck))
+
+
+def test_bucketed_duplicate_patterns(rng):
+    """Duplicate patterns each get their own CSR slot entry and count."""
+    base = _dict_patterns(rng, 64, 8)
+    pats = base + base[:16]
+    text = _planted_text(rng, pats, 2048, every=2)
+    idx = engine.build_index(text)
+    flat = engine.compile_patterns(pats, bucket=False, automaton=False)
+    buck = engine.compile_patterns(pats, bucket=True, automaton=True)
+    cf, cb = _counts(idx, flat), _counts(idx, buck)
+    np.testing.assert_array_equal(cf, cb)
+    # the duplicated rows really count the same occurrences
+    order = engine.plan_order(buck).tolist()
+    for i in range(16):
+        assert cb[0, order.index(64 + i)] == cb[0, order.index(i)]
+
+
+# ---------------------------------------------------------------------------
+# streaming / sharded seams
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("chunk", [512, 997])
+def test_bucketed_streaming_seams(rng, chunk):
+    """StreamScanner over bucketed plans == flat plans == whole-text scan,
+    with occurrences straddling chunk seams."""
+    pats = _dict_patterns(rng, 300, 8, sigma=4)
+    text = _planted_text(rng, pats, 6000, sigma=4, every=2)
+    flat = engine.compile_patterns(pats, bucket=False, automaton=False)
+    buck = engine.compile_patterns(pats, bucket=True, automaton=True)
+    want = StreamScanner(flat, chunk).count_many(text)
+    got = StreamScanner(buck, chunk).count_many(text)
+    np.testing.assert_array_equal(want, got)
+    idx = engine.build_index(text)
+    np.testing.assert_array_equal(got[None, :], _counts(idx, buck))
+
+
+@pytest.mark.parametrize("shards", [2, 3])
+def test_bucketed_sharded_seams(rng, shards):
+    """Sharded scan over bucketed plans: shard seams + chunk seams."""
+    pats = _dict_patterns(rng, 200, 8, sigma=4)
+    text = _planted_text(rng, pats, 8000, sigma=4, every=2)
+    flat = engine.compile_patterns(pats, bucket=False, automaton=False)
+    buck = engine.compile_patterns(pats, bucket=True, automaton=True)
+    want = ShardedStreamScanner(flat, shards, 997).count_many(bytes(text))
+    got = ShardedStreamScanner(buck, shards, 997).count_many(bytes(text))
+    np.testing.assert_array_equal(want, got)
+
+
+def test_cached_compile_dictionary_key_and_no_transfer(rng):
+    """The plan cache keys on (k, bucket, automaton): variants don't
+    collide, and a hit re-serves the SAME plan tuple with zero host->device
+    transfers (jax.transfer_guard enforced)."""
+    pats = [bytes(p) for p in _dict_patterns(rng, 150, 8)]
+    a = engine.compile_patterns_cached(pats)
+    b = engine.compile_patterns_cached(pats, bucket=False)
+    assert a is not b
+    assert any(p.slot_off is not None for p in a)
+    assert all(p.slot_off is None for p in b)
+    with jax.transfer_guard("disallow"):
+        again = engine.compile_patterns_cached(pats)
+    assert again is a
+
+
+# ---------------------------------------------------------------------------
+# adversarial routing (measured-density trigger)
+# ---------------------------------------------------------------------------
+
+
+def test_adversarial_flood_routes_and_counts(rng, monkeypatch):
+    """A fingerprint flood overflows the measured union budget and reroutes
+    to the automaton — with bit-identical counts; average text on the same
+    plans stays on the sparse CSR gather.  route_probe shares the
+    dispatcher's decision and emits the fallback_route event."""
+    monkeypatch.setattr(engine, "SPARSE_B_MIN_ELEMS", 0)
+    P, m, n = 1500, 8, 1 << 19  # n large enough for the budget to bind
+    pats = _dict_patterns(rng, P, m)
+    flat = engine.compile_patterns(pats, bucket=False, automaton=False)
+    buck = engine.compile_patterns(pats, bucket=True, automaton=True)
+    assert any(p.automaton is not None for p in buck)
+
+    avg = _planted_text(rng, pats, n)
+    flood = _flood_text(pats, n)
+    events = []
+    rec = Recorder(sinks=((lambda name, args: events.append((name, args))),))
+
+    idx_a = engine.build_index(avg)
+    info_a = engine.route_probe(idx_a, buck, recorder=rec)
+    assert info_a["route"] == "sparse"
+    assert info_a["blocks"] <= info_a["budget"]
+
+    idx_f = engine.build_index(flood)
+    info_f = engine.route_probe(idx_f, buck, recorder=rec)
+    assert info_f["route"] == "automaton"
+    assert info_f["blocks"] > info_f["budget"]
+    assert info_f["density"] > 2 * info_a["density"]
+
+    names = [nm for nm, _ in events]
+    assert names.count("fallback_route") == 2
+
+    for idx in (idx_a, idx_f):
+        np.testing.assert_array_equal(_counts(idx, flat), _counts(idx, buck))
+
+
+@pytest.mark.parametrize("seed", FAULT_SEEDS)
+def test_adversarial_determinism_seed_sweep(seed, monkeypatch):
+    """Chaos-sweep hook: at every seed, the adversarial texture's bucketed
+    counts are deterministic across repeat dispatches and equal the flat
+    plans'.  (The CI chaos job widens FAULT_SEEDS.)"""
+    monkeypatch.setattr(engine, "SPARSE_B_MIN_ELEMS", 0)
+    r = np.random.RandomState(0xD1C7 + seed)
+    pats = _dict_patterns(r, 400, 8, sigma=16)
+    text = _flood_text(pats, 1 << 15)
+    idx = engine.build_index(text)
+    flat = engine.compile_patterns(pats, bucket=False, automaton=False)
+    buck = engine.compile_patterns(pats, bucket=True, automaton=True)
+    c1, c2 = _counts(idx, buck), _counts(idx, buck)
+    np.testing.assert_array_equal(c1, c2)
+    np.testing.assert_array_equal(c1, _counts(idx, flat))
+
+
+# ---------------------------------------------------------------------------
+# packed automaton vs sequential reference
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("seed", FAULT_SEEDS)
+def test_automaton_counts_vs_naive(seed):
+    """Mixed lengths, duplicates, nested suffixes; lax.scan and kernel
+    paths; end_min seam gate — all against the naive oracle."""
+    r = np.random.RandomState(0xAC0 + seed)
+    pats = [r.randint(0, 4, size=m).astype(np.uint8) for m in (2, 3, 5, 8, 8)]
+    pats.append(pats[0].copy())           # duplicate
+    pats.append(pats[3][2:7].copy())      # embedded substring
+    auto = compile_automaton(pats)
+    assert auto is not None
+    text = r.randint(0, 4, size=(2, 777)).astype(np.uint8)
+    lengths = np.array([777, 640])
+    for kernel in (False, True):
+        got = np.asarray(
+            count_automaton(text, lengths, auto, use_kernel=kernel)
+        )
+        for b in range(2):
+            want = count_ref(text[b], lengths[b], pats)
+            np.testing.assert_array_equal(
+                got[b], want, err_msg=f"kernel={kernel} row={b}"
+            )
+    # end_min keeps only occurrences ending at or past the bound
+    g = np.asarray(count_automaton(text, lengths, auto, end_min=100))
+    for b in range(2):
+        want = np.zeros(len(pats), np.int64)
+        for i, p in enumerate(pats):
+            mask = baselines.naive_np(text[b][: lengths[b]], p)
+            pos = np.nonzero(mask)[0]
+            want[i] = int((pos + len(p) - 1 >= 100).sum())
+        np.testing.assert_array_equal(g[b], want)
+
+
+def test_automaton_states_match_sequential(rng):
+    """Segmented-parallel states == one-byte-at-a-time reference, on both
+    the lax.scan and Pallas kernel paths, at a seam-unfriendly seg."""
+    pats = [make_text(rng, m, 3) for m in (3, 5, 9, 9, 12)]
+    auto = compile_automaton(pats)
+    text = make_text(rng, 1000, 3)[None, :]
+    want = ac_states_ref(text[0], auto.classes, auto.delta, auto.n_classes)
+    for kernel in (False, True):
+        got = np.asarray(
+            automaton_states(text, auto, seg=64, use_kernel=kernel)
+        )[0]
+        np.testing.assert_array_equal(got, want, err_msg=f"kernel={kernel}")
+
+
+def test_automaton_caps_return_none():
+    """Blowing the size caps degrades to None (callers keep the LUT path)."""
+    pats = [np.arange(64, dtype=np.uint8) + i for i in range(4)]
+    assert compile_automaton(pats, max_states=8) is None
+
+
+def test_replicate_plans_with_automaton(rng):
+    """Device replication moves the attached automaton with the plan."""
+    pats = _dict_patterns(rng, 200, 8)
+    buck = engine.compile_patterns(pats, bucket=True, automaton=True)
+    dev = jax.local_devices()[0]
+    rep = engine.replicate_plans(buck, dev)
+    assert rep[0].automaton is not None
+    text = _planted_text(rng, pats, 2048)
+    idx = engine.build_index(text)
+    np.testing.assert_array_equal(_counts(idx, buck), _counts(idx, rep))
+
+
+# ---------------------------------------------------------------------------
+# expansion-budget heuristic (satellite fix) + megascan gates
+# ---------------------------------------------------------------------------
+
+
+def test_expected_union_blocks_model(rng):
+    """The block-level expectation is bounded by the total block count and
+    scales with the STATIC popcount — unlike the old (B*n*P)>>kbits proxy,
+    which at P=50k predicts ~24x more candidates than blocks exist."""
+    pats = _dict_patterns(rng, 2000, 8)
+    (plan,) = engine.compile_patterns(pats, automaton=False)
+    B, n = 4, 1 << 20
+    nblk = -(-n // engine.CAND_BLOCK)
+    exp, rho = engine._expected_union_blocks(B, n, (plan,))
+    assert 0 < exp <= B * nblk
+    assert 0.0 < rho < 1.0
+    # occupancy model: duplicates share slots, so popcount <= P
+    assert plan.lut_pop <= plan.n_patterns
+    old = (B * n * 50_000) >> engine.ENGINE_KBITS
+    assert old > B * nblk, "the flat proxy over-shoots at dictionary scale"
+    # more patterns -> monotonically denser
+    (small,) = engine.compile_patterns(pats[:100], automaton=False)
+    exp_s, rho_s = engine._expected_union_blocks(B, n, (small,))
+    assert exp_s < exp and rho_s < rho
+
+
+def test_shared_route_is_static_and_consistent(rng):
+    """_shared_b_route derives one host-static decision; the probe reports
+    exactly its budget/kind, so dispatcher and probe cannot disagree."""
+    pats = _dict_patterns(rng, 1200, 8)
+    buck = engine.compile_patterns(pats, bucket=True, automaton=True)
+    text = make_text(np.random.RandomState(7), 1 << 16, 256)
+    idx = engine.build_index(text)
+    route = engine._shared_b_route(idx, buck)
+    assert route.kind == "automaton"
+    assert route.budget <= idx.batch * (-(-idx.n // engine.CAND_BLOCK))
+    info = engine.route_probe(idx, buck)
+    assert info["budget"] == route.budget
+    assert info["kind"] == route.kind
+
+
+def test_megascan_gates_dictionary_plans(rng):
+    """P > MEGA_P_MAX and bucketed EPSMc plans are kernel-ineligible
+    (spec=None -> pure-JAX fused fallback); small flat sets still build."""
+    from repro.kernels.megascan.ops import MEGA_P_MAX
+
+    big = engine.compile_patterns(
+        _dict_patterns(rng, MEGA_P_MAX + 1, 8), automaton=False
+    )
+    assert build_mega_spec(big) is None
+    bucketed_c = engine.compile_patterns(
+        _dict_patterns(rng, 40, 16), bucket=True, automaton=False
+    )
+    assert bucketed_c[0].lut_bits is None
+    assert build_mega_spec(bucketed_c) is None
+    small = engine.compile_patterns(
+        _dict_patterns(rng, 40, 8), bucket=False, automaton=False
+    )
+    assert build_mega_spec(small) is not None
+
+
+def test_patternset_dictionary_passthrough(rng):
+    """PatternSet(bucket=, automaton=) reaches the compiler; verdicts are
+    unchanged."""
+    pats = [bytes(p) for p in _dict_patterns(rng, 300, 8)]
+    ps_flat = PatternSet(pats, bucket=False, automaton=False)
+    ps_dict = PatternSet(pats, bucket=True, automaton=True)
+    assert any(p.slot_off is not None for p in ps_dict.plans)
+    assert any(p.automaton is not None for p in ps_dict.plans)
+    doc = _planted_text(np.random.RandomState(3), [np.frombuffer(p, np.uint8) for p in pats], 4096)
+    assert bool(ps_flat.contains_any(doc)) == bool(ps_dict.contains_any(doc))
+    np.testing.assert_array_equal(
+        np.asarray(ps_flat.count_each(doc)), np.asarray(ps_dict.count_each(doc))
+    )
+
+
+def test_compile_recorder_spans_and_gauges(rng):
+    """Plan compilation reports its cost through repro.obs: a plan_compile
+    span, per-group events, occupancy gauges, and the automaton build."""
+    rec = Recorder(fence=False)
+    pats = _dict_patterns(rng, 1100, 8)
+    engine.compile_patterns(pats, recorder=rec)
+    groups = rec.events_named("plan_group")
+    assert len(groups) == 1 and groups[0]["n_patterns"] == 1100
+    assert groups[0]["bucketed"] == 1
+    assert rec.span_totals_ms().get("plan_compile", 0.0) > 0.0
+    assert rec.events_named("automaton_built")
+    g = rec.metrics.summary()["gauges"]
+    assert any(k.startswith("plan.lut_occupancy") for k in g)
