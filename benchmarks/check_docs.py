@@ -1,0 +1,115 @@
+"""Docs-link checker + quickstart extractor (stdlib only — CI's benchgate
+and tier1 jobs both run it without jax installed).
+
+    python benchmarks/check_docs.py [files...]      # default: README.md docs/*.md
+    python benchmarks/check_docs.py --print-quickstart
+
+Checks, for every markdown file given (default: README.md and docs/*.md,
+plus DESIGN.md section-reference validation everywhere):
+
+  * every relative markdown link target ``[text](path)`` exists (http(s)
+    links are skipped; ``#anchor`` suffixes are stripped);
+  * every ``DESIGN.md §N`` / ``§N–§M`` reference names a section that
+    actually exists as a ``## §N `` heading in DESIGN.md;
+  * every backticked repo path (`src/...py`, `benchmarks/...py`,
+    `docs/...md`, ...) containing a ``/`` exists on disk (tokens with
+    glob characters or spaces are skipped).
+
+--print-quickstart prints the body of README.md's FIRST ```python fence so
+CI can pipe it through an interpreter — the quickstart must actually run.
+Exit status: 0 clean, 1 with one diagnostic line per failure.
+"""
+
+from __future__ import annotations
+
+import argparse
+import re
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parents[1]
+
+MD_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+SECTION_REF = re.compile(r"DESIGN\.md\s*(§[0-9]+(?:[–-]§?[0-9]+)?)")
+BACKTICK_PATH = re.compile(r"`([A-Za-z0-9_./-]+/[A-Za-z0-9_.-]+\.[A-Za-z0-9]+)`")
+FENCE = re.compile(r"```python\n(.*?)```", re.DOTALL)
+
+
+def design_sections() -> set:
+    """Section numbers present as '## §N ' headings in DESIGN.md."""
+    out = set()
+    for line in (REPO / "DESIGN.md").read_text().splitlines():
+        m = re.match(r"##\s+§(\d+)\b", line)
+        if m:
+            out.add(int(m.group(1)))
+    return out
+
+
+def expand_ref(ref: str) -> list:
+    """'§7' -> [7]; '§1–§15' / '§1-15' -> [1..15]."""
+    nums = [int(n) for n in re.findall(r"\d+", ref)]
+    if len(nums) == 2:
+        return list(range(nums[0], nums[1] + 1))
+    return nums
+
+
+def check_file(path: Path, sections: set) -> list:
+    errors = []
+    text = path.read_text()
+    rel = path.relative_to(REPO)
+    for m in MD_LINK.finditer(text):
+        target = m.group(1).split("#", 1)[0]
+        if not target or target.startswith(("http://", "https://", "mailto:")):
+            continue
+        resolved = (path.parent / target).resolve()
+        if not resolved.exists():
+            errors.append(f"{rel}: broken link target {m.group(1)!r}")
+    for m in SECTION_REF.finditer(text):
+        for n in expand_ref(m.group(1)):
+            if n not in sections:
+                errors.append(
+                    f"{rel}: reference to DESIGN.md §{n}, which does not exist"
+                )
+    for m in BACKTICK_PATH.finditer(text):
+        token = m.group(1)
+        if any(c in token for c in "*{}<>"):
+            continue
+        if not ((REPO / token).exists() or (path.parent / token).exists()):
+            errors.append(f"{rel}: backticked path `{token}` does not exist")
+    return errors
+
+
+def quickstart() -> str:
+    m = FENCE.search((REPO / "README.md").read_text())
+    if not m:
+        raise SystemExit("README.md has no ```python fence")
+    return m.group(1)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("files", nargs="*")
+    ap.add_argument("--print-quickstart", action="store_true")
+    args = ap.parse_args()
+    if args.print_quickstart:
+        print(quickstart())
+        return 0
+    files = [Path(f).resolve() for f in args.files] or (
+        [REPO / "README.md"] + sorted((REPO / "docs").glob("*.md"))
+    )
+    sections = design_sections()
+    errors = []
+    for f in files:
+        if not f.exists():
+            errors.append(f"{f}: file does not exist")
+            continue
+        errors.extend(check_file(f, sections))
+    for e in errors:
+        print(e, file=sys.stderr)
+    if not errors:
+        print(f"docs OK ({len(files)} files, {len(sections)} DESIGN sections)")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -45,6 +45,9 @@ FILE_EXTRAS = {
     "BENCH_faults.json": {"shards": int, "fault_rate": (int, float),
                           "ratio_vs_clean": (int, float)},
     "BENCH_obs.json": {},      # two row families; shared keys only
+    "BENCH_service.json": {"clients": int, "qps": (int, float),
+                           "p50_ms": (int, float), "p99_ms": (int, float),
+                           "speedup_vs_uncoalesced": (int, float)},
 }
 # BENCH_paper_tables.json is a dict, not a row list: validated separately.
 PAPER_JSON = "BENCH_paper_tables.json"

@@ -990,6 +990,169 @@ def bench_obs(outdir: Path):
         _emit(row["name"], row["us_per_call"], f"GBps={row['GBps']:.3f}")
 
 
+def bench_service(outdir: Path):
+    """Grep-as-a-service QPS/latency bench (BENCH_service.json) — the first
+    bench measuring REQUEST metrics, not GB/s: thousands of queries with
+    Zipf-skewed pattern/corpus popularity from closed-loop concurrent
+    clients, at several client counts, through three query-plane arms:
+
+      * uncoalesced  — max_batch=1, no result cache: one engine dispatch
+        per query, the per-query baseline every answer is bit-identical to;
+      * coalesced    — the 2 ms micro-batching window (no result cache):
+        concurrent queries against the same corpus share dispatches;
+      * coalesced+cache — plus the keyed recent-result cache.
+
+    Rows carry clients/qps/p50_ms/p99_ms and speedup_vs_uncoalesced (QPS
+    ratio at the same client count).  GBps here is LOGICAL scanned
+    throughput — queries x corpus bytes / wall — not device bandwidth; it
+    exists so the shared row schema stays comparable, the meta says so.
+    The canonical-plan warmup (DESIGN.md §15) runs before any timing, so
+    compile cost lands in meta.compile_ms like every other bench."""
+    import asyncio
+    import json
+
+    from repro.data import corpus as corpus_mod
+    from repro.serve.query_plane import QueryPlane, ServiceConfig
+
+    SIZE = 1 << 20          # per-corpus bytes (pow2: no index padding)
+    N_CORPORA = 4
+    POOL = 64               # distinct patterns, m=12 (selective: corpus-drawn
+    #                         12-grams occur ~1-50x/MiB, like real grep
+    #                         queries; every union size stays on the sparse
+    #                         candidate path instead of the dense fallback)
+    LEVELS = (8, 32, 64, 128, 256, 512)
+    QUERIES = 1280          # per level per arm (same workload across arms)
+
+    texts = {
+        f"c{i}": corpus_mod.make_corpus("english", SIZE, seed=i).tobytes()
+        for i in range(N_CORPORA)
+    }
+    pool = [
+        bytes(p)
+        for p in corpus_mod.extract_patterns(
+            np.frombuffer(texts["c0"], np.uint8), 12, POOL, seed=7
+        )
+    ]
+    rng = np.random.RandomState(3)
+    pat_w = 1.0 / np.arange(1, POOL + 1) ** 1.1
+    pat_w /= pat_w.sum()
+    cor_w = 1.0 / np.arange(1, N_CORPORA + 1) ** 1.3
+    cor_w /= cor_w.sum()
+
+    def workload(level_seed: int):
+        r = np.random.RandomState(level_seed)
+        out = []
+        for _ in range(QUERIES):
+            cid = f"c{r.choice(N_CORPORA, p=cor_w)}"
+            npat = 1 + int(r.randint(0, 3))
+            pats = tuple(
+                pool[i] for i in r.choice(POOL, size=npat, replace=False,
+                                          p=pat_w)
+            )
+            out.append((cid, pats))
+        return out
+
+    ARMS = {
+        "uncoalesced": ServiceConfig(coalesce_ms=0.0, max_batch=1,
+                                     max_pending=4096,
+                                     result_cache_entries=0),
+        "coalesced": ServiceConfig(coalesce_ms=2.0, max_batch=64,
+                                   max_pending=4096,
+                                   result_cache_entries=0),
+        "coalesced+cache": ServiceConfig(coalesce_ms=2.0, max_batch=64,
+                                         max_pending=4096),
+    }
+
+    async def warmup():
+        # compile every canonical shape signature the arms can hit: pow2
+        # union sizes 1..POOL over the shared (1, SIZE) index shape
+        plane = QueryPlane(ARMS["uncoalesced"])
+        plane.add_corpus("c0", texts["c0"])
+        for p in range(0, POOL.bit_length()):
+            t0 = time.perf_counter()
+            await plane.query("c0", pool[: 1 << p])
+            _COMPILE_MS[f"service/union_P{1 << p}"] = (
+                time.perf_counter() - t0
+            ) * 1e3
+        await plane.close()
+
+    async def run_arm(cfg: ServiceConfig, clients: int, queries):
+        plane = QueryPlane(cfg)
+        for cid, text in texts.items():
+            plane.add_corpus(cid, text)
+        latencies: list = []
+
+        async def worker(mine):
+            for cid, pats in mine:
+                t0 = time.perf_counter()
+                await plane.query(cid, pats)
+                latencies.append(time.perf_counter() - t0)
+
+        t0 = time.perf_counter()
+        await asyncio.gather(
+            *[worker(queries[w::clients]) for w in range(clients)]
+        )
+        wall = time.perf_counter() - t0
+        stats = plane.stats()
+        await plane.close()
+        lat = np.sort(np.asarray(latencies))
+        q = len(lat)
+        return {
+            "wall_s": wall,
+            "qps": q / wall,
+            "mean_ms": float(lat.mean() * 1e3),
+            "p50_ms": float(lat[q // 2] * 1e3),
+            "p99_ms": float(lat[min(q - 1, int(q * 0.99))] * 1e3),
+            "dispatches": stats["dispatches"],
+            "cache_hits": stats["result_cache_hits"],
+        }
+
+    asyncio.run(warmup())
+    rows = []
+    base_qps: dict = {}
+    for li, clients in enumerate(LEVELS):
+        queries = workload(1000 + li)
+        for arm, cfg in ARMS.items():
+            r = asyncio.run(run_arm(cfg, clients, queries))
+            if arm == "uncoalesced":
+                base_qps[clients] = r["qps"]
+            speed = r["qps"] / base_qps[clients]
+            rows.append({
+                "name": f"service/{arm}/clients{clients}",
+                "us_per_call": r["mean_ms"] * 1e3,
+                "GBps": r["qps"] * SIZE / 1e9,
+                "size_bytes": SIZE,
+                "clients": clients,
+                "qps": round(r["qps"], 1),
+                "p50_ms": round(r["p50_ms"], 3),
+                "p99_ms": round(r["p99_ms"], 3),
+                "speedup_vs_uncoalesced": round(speed, 2),
+            })
+            _emit(
+                rows[-1]["name"], rows[-1]["us_per_call"],
+                f"qps={rows[-1]['qps']};p50={rows[-1]['p50_ms']}ms;"
+                f"p99={rows[-1]['p99_ms']}ms;x{rows[-1]['speedup_vs_uncoalesced']}",
+            )
+    meta = {
+        "queries_per_level": QUERIES,
+        "corpora": N_CORPORA,
+        "corpus_bytes": SIZE,
+        "pattern_pool": POOL,
+        "pattern_m": 8,
+        "popularity": "zipf(1.1) patterns, zipf(1.3) corpora",
+        "closed_loop": True,
+        "note": (
+            "request-latency bench: GBps is LOGICAL throughput "
+            "(qps x corpus_bytes / 1e9), not device bandwidth; "
+            "speedup_vs_uncoalesced is the QPS ratio at equal clients"
+        ),
+        "compile_ms": drain_compile_ms(),
+    }
+    (outdir / "BENCH_service.json").write_text(
+        json.dumps({"meta": meta, "rows": rows}, indent=1)
+    )
+
+
 def bench_pipeline(outdir: Path):
     from repro.data import corpus
     from repro.data.pipeline import LMDataPipeline
@@ -1047,6 +1210,7 @@ def main():
         "shard": lambda: bench_shard(outdir),
         "faults": lambda: bench_faults(outdir),
         "obs": lambda: bench_obs(outdir),
+        "service": lambda: bench_service(outdir),
         "pipeline": lambda: bench_pipeline(outdir),
         "roofline": lambda: bench_roofline_report(outdir),
     }

@@ -14,8 +14,13 @@ TPU-style, as an explicit two-phase design (DESIGN.md §7):
   * :class:`PatternPlan` — everything that depends only on the patterns,
     compiled once per equal-length group: the stacked packed anchor words
     (EPSMb) and a union 2^k lookup table over all patterns' block
-    fingerprints with pattern-id payload bitmasks (EPSMc).  The plan for a
-    group of P patterns answers all P in one probe of the shared text work.
+    fingerprints.  Payloads scale with the group: pattern-id / bitmask LUTs
+    at flat P, fingerprint-sorted CSR slot tables (plus an optional packed
+    Aho-Corasick fallback) at dictionary scale (DESIGN.md §14).  The plan
+    for a group of P patterns answers all P in one probe of the shared text
+    work; ``compile_patterns(..., canonical=True)`` additionally quantizes
+    the plan statics so the serving query plane can coalesce arbitrary
+    unions onto one jitted executable (DESIGN.md §15).
 
   * :func:`match_many` joins them: ``bool[B, P, n]`` match-start masks for
     P patterns x B texts in ONE device dispatch (one jit call, no host loop
@@ -363,6 +368,11 @@ def _dict_bbits(P: int, kbits: int) -> int:
     return int(min(DICT_BBITS_MAX, max(0, need)))
 
 
+def _pow2_ceil(n: int) -> int:
+    """Smallest power of two >= n (n >= 1)."""
+    return 1 << max(0, int(n - 1).bit_length())
+
+
 def compile_patterns(
     patterns: Sequence,
     *,
@@ -371,12 +381,14 @@ def compile_patterns(
     k: int = 0,
     bucket="auto",
     automaton="auto",
+    canonical: bool = False,
     recorder: Optional[Recorder] = None,
 ) -> Tuple[PatternPlan, ...]:
     """Group patterns by length and compile one PatternPlan per group.
 
     Returned plans are sorted by m; each plan's ``ids`` maps its rows back to
-    positions in the input sequence (match_many output is plan-concatenated).
+    positions in the input sequence (match_many output is plan-concatenated;
+    ``plan_order(plans)`` gives the row -> input-position permutation).
 
     ``k`` is the mismatch budget the plans are compiled for (repro.approx,
     DESIGN.md §8): plans additionally carry a host-expanded relaxed
@@ -394,6 +406,23 @@ def compile_patterns(
     plans: True forces a build over the WHOLE input dictionary, "auto"
     builds it when the total pattern count reaches AUTOMATON_MIN_P and the
     automaton's size caps hold, False skips it.
+
+    ``canonical`` quantizes every content-dependent static in the plan aux
+    data so that jit caching keys on the pattern set's SHAPE signature, not
+    its content (DESIGN.md §15).  Concretely: ``lut_pop``, ``slot_max`` and
+    ``relaxed_bits`` are rounded up to powers of two (they only feed budget
+    heuristics and verify bounds, so rounding is exactness-preserving).
+    ``distinct`` stays content-dependent — it is a single bool, so a shape
+    signature compiles at most TWO executables, and for the deduplicated
+    unions the serving plane builds, fingerprint collisions are rare enough
+    (~P^2 / 2^18) that in practice every same-shape union shares one: the
+    O(candidates) pid fast path instead of the O(candidates * P) all-
+    pattern verify, which is what keeps a coalesced union dispatch near
+    flat in P.  Two canonical compiles whose groups agree on (m, P, k,
+    bucketing, distinct) hit the same jitted executable — the property the
+    serving query plane (repro.serve.query_plane) relies on to coalesce
+    arbitrary pattern unions without per-union XLA recompiles.  Default
+    False: offline callers keep the content-tuned statics.
 
     ``recorder`` (repro.obs) captures the compile-time span, per-group LUT
     occupancy/bucket gauges, and automaton build/skip events — the plan-
@@ -502,6 +531,16 @@ def compile_patterns(
                 relaxed = relaxed_window_lut(pats, kbits=kb, k=k)
                 if relaxed is not None:
                     relaxed_bits = int(relaxed.sum())
+            if canonical:
+                # quantize the budget/bound statics to powers of two: they
+                # enter the plan aux data (jit cache key) and trace-time
+                # candidate budgets, and rounding UP only loosens exact-by-
+                # construction bounds — see the compile_patterns docstring
+                lut_pop = min(1 << kb, _pow2_ceil(max(1, lut_pop)))
+                if slot_max:
+                    slot_max = min(P, _pow2_ceil(slot_max))
+                if relaxed_bits:
+                    relaxed_bits = min(1 << kb, _pow2_ceil(relaxed_bits))
             rec.event(
                 "plan_group", m=m, n_patterns=P, bucketed=int(bucketed),
                 bbits=bbits, kbits=kb, lut_pop=lut_pop, slot_max=slot_max,
@@ -603,6 +642,7 @@ def replicate_plans(
 
 _PLAN_CACHE: dict = {}
 _PLAN_CACHE_MAX = 64
+_PLAN_CACHE_STATS = {"hits": 0, "misses": 0}
 # id(array) -> (weakref, canonical-u8 bytes): per-object digest memo so a
 # device-resident pattern pays its device_get round-trip ONCE, not on every
 # cache probe.  The weakref guards against id() reuse after GC: a recycled
@@ -645,28 +685,47 @@ def _pattern_cache_token(p) -> bytes:
 
 
 def compile_patterns_cached(
-    patterns: Sequence, *, k: int = 0, bucket="auto", automaton="auto"
+    patterns: Sequence, *, k: int = 0, bucket="auto", automaton="auto",
+    canonical: bool = False, recorder: Optional[Recorder] = None,
 ) -> Tuple[PatternPlan, ...]:
-    """compile_patterns with a small host-side memo keyed by pattern bytes
-    (and the compile knobs: mismatch budget k, bucket/automaton routing).
+    """compile_patterns with a small host-side LRU memo keyed by pattern
+    bytes (and the compile knobs: mismatch budget k, bucket/automaton
+    routing, canonical quantization).
 
     The convenience wrappers (find_multi & co., the batched kernels) receive
     raw pattern stacks per call; without this, every call would pay the
     host-side plan build (2^17 LUT allocation + upload) that PatternSet
     amortizes by construction.  Key construction is transfer-free on cache
     hits: a repeat call with the same (live) device arrays costs dict probes
-    only, no jax.device_get (see _pattern_cache_token)."""
-    key = (k, bucket, automaton) + tuple(
+    only, no jax.device_get (see _pattern_cache_token).  Eviction is
+    least-recently-USED (hits refresh recency), so a serving workload's hot
+    pattern unions stay resident under tail-churn; hit/miss totals are
+    exposed via plan_cache_stats() and, when ``recorder`` is passed, the
+    plan_cache.hit / plan_cache.miss counters (DESIGN.md §15)."""
+    rec = _DEFAULT_REC if recorder is None else recorder
+    key = (k, bucket, automaton, canonical) + tuple(
         _pattern_cache_token(p) for p in patterns
     )
-    plans = _PLAN_CACHE.get(key)
+    plans = _PLAN_CACHE.pop(key, None)
     if plans is None:
+        _PLAN_CACHE_STATS["misses"] += 1
+        rec.count("plan_cache.miss")
         plans = compile_patterns(patterns, k=k, bucket=bucket,
-                                 automaton=automaton)
+                                 automaton=automaton, canonical=canonical,
+                                 recorder=recorder)
         if len(_PLAN_CACHE) >= _PLAN_CACHE_MAX:
             _PLAN_CACHE.pop(next(iter(_PLAN_CACHE)))
-        _PLAN_CACHE[key] = plans
+    else:
+        _PLAN_CACHE_STATS["hits"] += 1
+        rec.count("plan_cache.hit")
+    _PLAN_CACHE[key] = plans  # (re)insert at the recent end
     return plans
+
+
+def plan_cache_stats() -> dict:
+    """Lifetime hit/miss totals and current size of the plan memo — the
+    query plane surfaces these in its stats() snapshot (DESIGN.md §15)."""
+    return dict(_PLAN_CACHE_STATS, entries=len(_PLAN_CACHE))
 
 
 # ---------------------------------------------------------------------------
@@ -1508,7 +1567,9 @@ def match_many(
     end_min: Optional[int] = None,
 ) -> jnp.ndarray:
     """bool[B, P_total, n] match-start masks, rows in plan-concatenated order
-    (use :func:`plan_order` to map back to the original pattern order).
+    (use :func:`plan_order` to map back to the original pattern order) — the
+    engine's one-dispatch join of a TextIndex with compiled plans
+    (DESIGN.md §7).
 
     ``k`` is the mismatch budget (repro.approx): mask[b, p, i] is True iff
     the m-byte window at i differs from pattern p in at most k bytes.  k=0
@@ -1694,6 +1755,10 @@ def any_hit(
 def match_many_jit(
     index: TextIndex, plans: Tuple[PatternPlan, ...], *, k: Optional[int] = None
 ) -> jnp.ndarray:
+    """Module-level jitted :func:`match_many`: callers that share this entry
+    point share one XLA executable cache keyed on (index shapes, plan aux
+    statics, k) — canonical plans make that key content-independent
+    (DESIGN.md §15)."""
     return match_many(index, plans, k=k)
 
 
@@ -1701,6 +1766,8 @@ def match_many_jit(
 def count_many_jit(
     index: TextIndex, plans: Tuple[PatternPlan, ...], *, k: Optional[int] = None
 ) -> jnp.ndarray:
+    """Module-level jitted :func:`count_many` — see :func:`match_many_jit`
+    for the executable-cache sharing contract."""
     return count_many(index, plans, k=k)
 
 

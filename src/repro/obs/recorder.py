@@ -72,7 +72,9 @@ def logging_sink(logger: logging.Logger, level: int = logging.INFO) -> Sink:
 
 
 class Recorder:
-    """Spans + events + metrics behind one handle (see module docstring).
+    """Spans + events + metrics behind one handle (see module docstring;
+    DESIGN.md §13 is the design, benchmarks/validate_trace.py the export
+    contract the serving plane's dispatch lane also honors).
 
     ``span(name, lane=..., **args)`` returns a context manager timing a
     nested region on that lane; ``event(name, lane=..., **args)`` records

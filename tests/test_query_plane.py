@@ -1,0 +1,391 @@
+"""Grep-as-a-service query plane (DESIGN.md §15, repro/serve/query_plane.py).
+
+The acceptance properties ISSUE 10 names:
+  * coalesced batches are BIT-IDENTICAL to sequential per-query dispatches,
+    under concurrent asyncio load with mixed pattern lengths, mixed k, and
+    result-cache hits in the stream;
+  * admission control rejects deterministically at the configured depth;
+  * the corpus LRU evicts by byte budget, reports evictions, and either
+    404s or transparently reloads depending on the loader hook;
+  * the exported service trace passes benchmarks/validate_trace.py.
+"""
+
+import asyncio
+import json
+import sys
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+REPO = Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(REPO))
+
+from benchmarks.validate_trace import validate_trace  # noqa: E402
+
+from repro.core import engine
+from repro.obs.recorder import Recorder
+from repro.serve.query_plane import (
+    CorpusCache,
+    QueryPlane,
+    QueryRejected,
+    ServiceConfig,
+    UnknownCorpus,
+    canonical_union,
+)
+from repro.serve.server import GrepClient, GrepServer
+
+
+def _mk_text(rng, n=20_000):
+    text = rng.randint(97, 123, size=n).astype(np.uint8)
+    words = [b"needle", b"xy", b"longneedlepattern_over16", b"abcd"]
+    for i, w in enumerate(words * 40):
+        pos = int(rng.randint(0, n - 32))
+        text[pos : pos + len(w)] = np.frombuffer(w, np.uint8)
+    return text.tobytes()
+
+
+def _oracle_counts(text: bytes, patterns, k=0):
+    """Per-query reference: its own non-canonical compile + dispatch."""
+    arr = np.frombuffer(text, np.uint8)[None, :].copy()
+    idx = engine.build_index(arr, np.array([len(text)], np.int32))
+    plans = engine.compile_patterns(list(patterns), k=k)
+    out = np.asarray(engine.count_many(idx, plans, k=k))[0]
+    inv = np.argsort(engine.plan_order(plans))
+    return out[inv].astype(np.int32)
+
+
+# ---------------------------------------------------------------------------
+# canonical union construction
+# ---------------------------------------------------------------------------
+
+def test_canonical_union_pads_groups_to_pow2():
+    pats = [b"ab", b"cd", b"ef", b"abcd", b"xy", b"ab"]  # dup collapses
+    union, position = canonical_union(pats)
+    by_len = {}
+    for p in union:
+        by_len.setdefault(len(p), []).append(p)
+    assert len(by_len[2]) == 4  # 3 unique -> padded to 4
+    assert len(by_len[4]) == 1
+    # every input pattern resolves to a union slot holding itself
+    for p in set(pats):
+        assert union[position[p]] == p
+    # deterministic: same multiset, same union
+    assert canonical_union(list(reversed(pats)))[0][:3] != ()
+    u2, _ = canonical_union(pats)
+    assert u2 == union
+
+
+def test_canonical_plans_share_jit_signature():
+    """Two same-shape canonical unions must produce identical plan aux
+    data — the no-retrace property the service depends on."""
+    a = engine.compile_patterns([b"aaaaaaaa", b"bbbbbbbb"], canonical=True)
+    b = engine.compile_patterns([b"cccccccc"[:8], b"ddddddzz"], canonical=True)
+    assert [p.tree_flatten()[1] for p in a] == [
+        p.tree_flatten()[1] for p in b
+    ]
+
+
+# ---------------------------------------------------------------------------
+# coalesced == per-query bit-identity
+# ---------------------------------------------------------------------------
+
+def test_coalesced_bit_identity_under_concurrent_load(rng):
+    """Mixed pattern lengths and duplicated hot patterns across ~40
+    concurrent queries: every coalesced answer equals its own standalone
+    dispatch, and coalescing actually shared dispatches."""
+    text = _mk_text(rng)
+    pools = [
+        [b"needle", b"xy", b"abcd"],
+        [b"longneedlepattern_over16", b"needle"],
+        [b"zz", b"qjx", b"needle", b"vwxyza"],
+        [b"nomatchhere"],
+    ]
+
+    async def main():
+        plane = QueryPlane(ServiceConfig(coalesce_ms=5.0, max_batch=64))
+        plane.add_corpus("c", text)
+        queries = [pools[i % len(pools)] for i in range(40)]
+        results = await asyncio.gather(
+            *[plane.query("c", q) for q in queries]
+        )
+        await plane.close()
+        return queries, results, plane.counters
+
+    queries, results, counters = asyncio.run(main())
+    for q, r in zip(queries, results):
+        expect = _oracle_counts(text, q)
+        assert np.array_equal(r.counts, expect), (q, r.counts, expect)
+    assert counters["dispatches"] < counters["requests"]
+    assert counters["dispatched_queries"] >= 40 - counters["result_cache_hits"]
+
+
+def test_coalesced_bit_identity_mixed_k(rng):
+    """k=0 and k=1 queries over the same corpus coalesce into SEPARATE
+    buckets (k is part of the dispatch signature) and both stay exact."""
+    text = _mk_text(rng)
+
+    async def main():
+        plane = QueryPlane(ServiceConfig(coalesce_ms=5.0))
+        plane.add_corpus("c", text)
+        k0 = [plane.query("c", [b"needle", b"abcd"]) for _ in range(3)]
+        k1 = [plane.query("c", [b"needlz"], k=1) for _ in range(3)]
+        res = await asyncio.gather(*k0, *k1)
+        await plane.close()
+        return res
+
+    res = asyncio.run(main())
+    exp0 = _oracle_counts(text, [b"needle", b"abcd"])
+    exp1 = _oracle_counts(text, [b"needlz"], k=1)
+    for r in res[:3]:
+        assert np.array_equal(r.counts, exp0)
+    for r in res[3:]:
+        assert r.k == 1 and np.array_equal(r.counts, exp1)
+
+
+def test_match_mode_positions(rng):
+    text = b"ab" + _mk_text(rng, 4_000) + b"needle"
+
+    async def main():
+        plane = QueryPlane(ServiceConfig(coalesce_ms=1.0))
+        plane.add_corpus("c", text)
+        r = await plane.query("c", [b"needle", b"ab"], mode="match")
+        await plane.close()
+        return r
+
+    r = asyncio.run(main())
+    raw = np.frombuffer(text, np.uint8)
+    for pat, pos in zip([b"needle", b"ab"], r.positions):
+        w = np.frombuffer(pat, np.uint8)
+        expect = np.asarray(
+            [
+                i
+                for i in range(len(text) - len(pat) + 1)
+                if np.array_equal(raw[i : i + len(pat)], w)
+            ],
+            np.int64,
+        )
+        assert np.array_equal(pos, expect)
+    assert np.array_equal(r.counts, [p.size for p in r.positions])
+
+
+def test_result_cache_hits_are_bit_identical(rng):
+    text = _mk_text(rng)
+
+    async def main():
+        plane = QueryPlane(ServiceConfig(coalesce_ms=0.0))
+        plane.add_corpus("c", text)
+        first = await plane.query("c", [b"needle", b"xy"])
+        again = await plane.query("c", [b"needle", b"xy"])
+        await plane.close()
+        return first, again, plane.counters
+
+    first, again, counters = asyncio.run(main())
+    assert not first.cached and again.cached
+    assert counters["result_cache_hits"] == 1
+    assert np.array_equal(first.counts, again.counts)
+
+
+# ---------------------------------------------------------------------------
+# admission control / backpressure
+# ---------------------------------------------------------------------------
+
+def test_admission_queue_rejects_at_depth(rng):
+    """With an effectively-infinite coalescing window, admitted queries
+    park in the open batch: query max_pending+1 must raise QueryRejected,
+    and a flush() drains the parked ones successfully."""
+    text = _mk_text(rng, 4_000)
+
+    async def main():
+        plane = QueryPlane(
+            ServiceConfig(coalesce_ms=60_000.0, max_batch=10_000,
+                          max_pending=5, result_cache_entries=0,
+                          flush_on_idle=False)
+        )
+        plane.add_corpus("c", text)
+        parked = [
+            asyncio.create_task(plane.query("c", [b"needle"]))
+            for _ in range(5)
+        ]
+        await asyncio.sleep(0)  # let tasks enter the batch
+        assert plane.stats()["pending"] == 5
+        with pytest.raises(QueryRejected):
+            await plane.query("c", [b"xy"])
+        assert plane.counters["rejected"] == 1
+        await plane.flush()
+        results = await asyncio.gather(*parked)
+        await plane.close()
+        return results
+
+    results = asyncio.run(main())
+    expect = _oracle_counts(text, [b"needle"])
+    assert all(np.array_equal(r.counts, expect) for r in results)
+    # all five parked queries shared ONE dispatch
+    assert all(r.batched == 5 for r in results)
+
+
+def test_flush_on_idle_dispatch_clocked_batching(rng):
+    """Dispatch-clocked coalescing: an idle dispatcher takes the first
+    query immediately (no window latency), and everything arriving while
+    it runs coalesces into exactly one follow-up dispatch — even with an
+    effectively-infinite coalesce_ms cap."""
+    text = _mk_text(rng, 4_000)
+
+    async def main():
+        plane = QueryPlane(
+            ServiceConfig(coalesce_ms=60_000.0, max_batch=10_000,
+                          result_cache_entries=0)
+        )
+        plane.add_corpus("c", text)
+        results = await asyncio.gather(
+            *[plane.query("c", [b"needle"]) for _ in range(10)]
+        )
+        await plane.close()
+        return results, plane.counters
+
+    results, counters = asyncio.run(main())
+    assert counters["dispatches"] == 2
+    assert sorted(r.batched for r in results) == [1] + [9] * 9
+    expect = _oracle_counts(text, [b"needle"])
+    assert all(np.array_equal(r.counts, expect) for r in results)
+
+
+def test_rejection_does_not_leak_pending(rng):
+    text = _mk_text(rng, 4_000)
+
+    async def main():
+        plane = QueryPlane(
+            ServiceConfig(coalesce_ms=0.0, max_pending=2,
+                          result_cache_entries=0)
+        )
+        plane.add_corpus("c", text)
+        for _ in range(4):  # sequential: never exceeds depth 1
+            await plane.query("c", [b"xy"])
+        assert plane.stats()["pending"] == 0
+        await plane.close()
+
+    asyncio.run(main())
+
+
+# ---------------------------------------------------------------------------
+# corpus cache eviction
+# ---------------------------------------------------------------------------
+
+def _budget_for(texts):
+    """Byte budget that fits exactly ONE of the (equal-sized) corpora."""
+    cache = CorpusCache(1 << 62)
+    e = cache.put("probe", texts[0])
+    return e.nbytes + 1
+
+
+def test_corpus_lru_eviction_and_404(rng):
+    texts = [_mk_text(rng, 8_000) for _ in range(3)]
+
+    async def main():
+        plane = QueryPlane(
+            ServiceConfig(coalesce_ms=0.0,
+                          corpus_budget_bytes=_budget_for(texts))
+        )
+        rec = Recorder(enabled=True, fence=False)
+        plane.rec = plane.corpora.rec = rec
+        for i, t in enumerate(texts):
+            plane.add_corpus(f"c{i}", t)
+        # only the most recent survives the byte budget
+        assert plane.corpora.ids() == ("c2",)
+        evicts = rec.events_named("corpus_evict")
+        assert [e["corpus"] for e in evicts] == ["c0", "c1"]
+        r = await plane.query("c2", [b"needle"])
+        assert np.array_equal(r.counts, _oracle_counts(texts[2], [b"needle"]))
+        with pytest.raises(UnknownCorpus):
+            await plane.query("c0", [b"needle"])
+        await plane.close()
+
+    asyncio.run(main())
+
+
+def test_corpus_eviction_transparent_reload(rng):
+    texts = {f"c{i}": _mk_text(rng, 8_000) for i in range(2)}
+
+    async def main():
+        plane = QueryPlane(
+            ServiceConfig(coalesce_ms=0.0,
+                          corpus_budget_bytes=_budget_for(list(texts.values()))),
+            loader=lambda cid: texts[cid],
+        )
+        plane.add_corpus("c0", texts["c0"])
+        plane.add_corpus("c1", texts["c1"])  # evicts c0
+        assert plane.corpora.ids() == ("c1",)
+        r = await plane.query("c0", [b"needle"])  # transparently reloads
+        await plane.close()
+        return r, plane.counters
+
+    r, counters = asyncio.run(main())
+    assert counters["corpus_reloads"] == 1
+    assert np.array_equal(r.counts, _oracle_counts(texts["c0"], [b"needle"]))
+
+
+def test_corpus_get_refreshes_lru(rng):
+    texts = [_mk_text(rng, 8_000) for _ in range(2)]
+    cache = CorpusCache(1 << 62)
+    cache.put("a", texts[0])
+    cache.put("b", texts[1])
+    cache.get("a")  # refresh
+    assert cache.ids() == ("b", "a")
+
+
+# ---------------------------------------------------------------------------
+# server round trip + trace hygiene
+# ---------------------------------------------------------------------------
+
+def test_server_roundtrip_matches_engine(rng):
+    text = _mk_text(rng)
+
+    async def main():
+        plane = QueryPlane(ServiceConfig(coalesce_ms=1.0))
+        async with GrepServer(plane) as (host, port):
+            clients = [await GrepClient.connect(host, port) for _ in range(3)]
+            await clients[0].add_corpus("c", text)
+            outs = await asyncio.gather(
+                *[c.query("c", [b"needle", b"xy"]) for c in clients]
+            )
+            missing = await clients[0].query("nope", [b"x"])
+            stats = await clients[0].stats()
+            for c in clients:
+                await c.close()
+        return outs, missing, stats
+
+    outs, missing, stats = asyncio.run(main())
+    expect = [int(c) for c in _oracle_counts(text, [b"needle", b"xy"])]
+    for o in outs:
+        assert o["ok"] and o["counts"] == expect
+    assert missing["status"] == 404 and missing["error"] == "unknown_corpus"
+    assert stats["stats"]["requests"] >= 3
+
+
+def test_service_trace_passes_validator(rng, tmp_path):
+    text = _mk_text(rng)
+
+    async def main():
+        rec = Recorder(enabled=True, fence=True)
+        plane = QueryPlane(
+            ServiceConfig(coalesce_ms=2.0), recorder=rec
+        )
+        plane.add_corpus("c", text)
+        await asyncio.gather(
+            *[plane.query("c", [b"needle", b"xy"]) for _ in range(8)],
+            plane.query("c", [b"abcd"], mode="match"),
+        )
+        await plane.close()
+        return rec
+
+    rec = asyncio.run(main())
+    out = tmp_path / "service_trace.json"
+    rec.export_trace(out)
+    trace = json.loads(out.read_text())
+    assert validate_trace(trace) == len(trace["traceEvents"])
+    names = {e["name"] for e in trace["traceEvents"] if e["ph"] == "X"}
+    assert {"service_batch", "plan_union", "engine_dispatch"} <= names
+    # latency SLO histograms are populated
+    plane_hist = rec.metrics.summary()["histograms"]
+    assert plane_hist["service.request_ms"]["count"] == 9
+    assert "p99" in plane_hist["service.request_ms"]
