@@ -462,6 +462,7 @@ def compile_patterns(
             slot_off = slot_ids = anchors_sorted = None
             c_slot_off = c_entry_pid = c_entry_off = c_entry_pat = None
             slot_max = 0
+            slot_cap = P  # total CSR entries; EPSMc registers P * stride
             distinct = False
             if m < EPSMA_MAX:
                 pass  # dense byte compares; no fingerprint machinery
@@ -516,6 +517,7 @@ def compile_patterns(
                     c_entry_off = (order % stride).astype(np.int32)
                     c_entry_pat = pats[c_entry_pid]
                     slot_max = int(occ.max())
+                    slot_cap = P * stride
                 else:
                     nwords = -(-P // 32)
                     lut_bits = np.zeros((1 << kb, nwords), np.uint32)
@@ -538,7 +540,12 @@ def compile_patterns(
                 # construction bounds — see the compile_patterns docstring
                 lut_pop = min(1 << kb, _pow2_ceil(max(1, lut_pop)))
                 if slot_max:
-                    slot_max = min(P, _pow2_ceil(slot_max))
+                    # clamp against the plan's TOTAL CSR entry count, not P:
+                    # an EPSMc slot can exceed P (patterns sharing a repeated
+                    # or common block register the same fingerprint at
+                    # several offsets), and rounding slot_max down would make
+                    # _c_verify_csr skip live entries and drop matches
+                    slot_max = min(slot_cap, _pow2_ceil(slot_max))
                 if relaxed_bits:
                     relaxed_bits = min(1 << kb, _pow2_ceil(relaxed_bits))
             rec.event(

@@ -145,6 +145,12 @@ class CorpusCache:
         self._entries: "OrderedDict[str, CorpusEntry]" = OrderedDict()
 
     def put(self, corpus_id: str, data) -> CorpusEntry:
+        return self.install(self.build(corpus_id, data))
+
+    def build(self, corpus_id: str, data) -> CorpusEntry:
+        """Build the device index for ``data`` WITHOUT touching the LRU —
+        pure and thread-safe, so the plane's loader path can run it on an
+        executor and keep the event loop responsive during the build."""
         raw = bytes(data.tobytes() if isinstance(data, np.ndarray) else data)
         if not raw:
             raise ValueError("corpus must be non-empty")
@@ -154,18 +160,22 @@ class CorpusCache:
         padded[0, : arr.size] = arr
         index = engine.build_index(padded, np.array([arr.size], np.int32))
         jax.block_until_ready(index.packed)
-        entry = CorpusEntry(
+        return CorpusEntry(
             corpus_id=str(corpus_id),
             index=index,
             digest=hashlib.sha1(raw).hexdigest(),
             nbytes=_index_nbytes(index),
             raw_len=arr.size,
         )
+
+    def install(self, entry: CorpusEntry) -> CorpusEntry:
+        """Insert a built entry into the LRU and evict over budget (event-
+        loop side of ``put``; single-threaded with ``get``)."""
         self._entries.pop(entry.corpus_id, None)
         self._entries[entry.corpus_id] = entry
         self.rec.event(
             "corpus_load", corpus=entry.corpus_id, nbytes=entry.nbytes,
-            raw_len=entry.raw_len, n=n,
+            raw_len=entry.raw_len, n=entry.index.text.shape[1],
         )
         self._evict_over_budget(keep=entry.corpus_id)
         return entry
@@ -338,6 +348,7 @@ class QueryPlane:
             max_workers=1, thread_name_prefix="svc-dispatch"
         )
         self._pending = 0
+        self._reloads: Dict[str, asyncio.Task] = {}
         self.counters = {
             "requests": 0, "rejected": 0, "result_cache_hits": 0,
             "dispatches": 0, "dispatched_queries": 0, "corpus_reloads": 0,
@@ -350,15 +361,31 @@ class QueryPlane:
         returns the content digest used in result-cache keys."""
         return self.corpora.put(corpus_id, data).digest
 
-    def _resident(self, corpus_id: str) -> CorpusEntry:
-        entry = self.corpora.get(corpus_id)
-        if entry is None:
-            if self.loader is None:
-                raise UnknownCorpus(corpus_id)
-            data = self.loader(corpus_id)
-            entry = self.corpora.put(corpus_id, data)
-            self.counters["corpus_reloads"] += 1
-            self.rec.count("service.corpus_reloads")
+    async def _resident(self, corpus_id: str) -> CorpusEntry:
+        cid = str(corpus_id)
+        entry = self.corpora.get(cid)
+        if entry is not None:
+            return entry
+        if self.loader is None:
+            raise UnknownCorpus(cid)
+        # loader + index build run on the executor so a reload never stalls
+        # the event loop (admission, coalescing, other connections); one
+        # in-flight reload per corpus id — concurrent misses share it
+        task = self._reloads.get(cid)
+        if task is None:
+            task = asyncio.get_running_loop().create_task(self._reload(cid))
+            self._reloads[cid] = task
+            task.add_done_callback(lambda _t: self._reloads.pop(cid, None))
+        return await task
+
+    async def _reload(self, cid: str) -> CorpusEntry:
+        loop = asyncio.get_running_loop()
+        entry = await loop.run_in_executor(
+            self._pool, lambda: self.corpora.build(cid, self.loader(cid))
+        )
+        self.corpora.install(entry)
+        self.counters["corpus_reloads"] += 1
+        self.rec.count("service.corpus_reloads")
         return entry
 
     # -- the query path -----------------------------------------------------
@@ -386,7 +413,7 @@ class QueryPlane:
             raise ValueError("at least one pattern required")
         self.counters["requests"] += 1
         self.rec.count("service.requests")
-        entry = self._resident(corpus_id)
+        entry = await self._resident(corpus_id)
 
         ckey = (entry.digest, mode, int(k), pats)
         hit = self._cache_get(ckey)
@@ -411,15 +438,23 @@ class QueryPlane:
         loop = asyncio.get_running_loop()
         fut: asyncio.Future = loop.create_future()
         req = _Request(pats, fut, t0)
-        bkey = (str(corpus_id), mode, int(k))
+        # the digest keys the bucket: if add_corpus/reload replaces the
+        # content while a bucket is open, later queries open a FRESH bucket
+        # against the new index instead of joining one that would answer
+        # them (and populate the result cache) from the old content
+        bkey = (str(corpus_id), entry.digest, mode, int(k))
         batch = self._batches.get(bkey)
         if batch is None:
             batch = _Batch(bkey, entry, mode, int(k))
             self._batches[bkey] = batch
-            batch.timer = loop.call_later(
-                max(0.0, self.cfg.coalesce_ms) / 1e3,
-                self._timer_fire, bkey, batch,
-            )
+            if self.cfg.coalesce_ms > 0 or not self.cfg.flush_on_idle:
+                # coalesce_ms <= 0 under flush_on_idle: no timer at all —
+                # liveness comes from the immediate-idle flush below and
+                # the dispatch-completion FIFO flush in _run_batch
+                batch.timer = loop.call_later(
+                    max(0.0, self.cfg.coalesce_ms) / 1e3,
+                    self._timer_fire, bkey, batch,
+                )
         batch.requests.append(req)
         if len(batch.requests) >= self.cfg.max_batch or (
             self.cfg.flush_on_idle and self._inflight == 0

@@ -17,7 +17,8 @@ Requests (``id`` is echoed back; binary payloads ride base64 fields):
 
 Responses carry ``{"id", "ok"}`` plus op-specific fields; failures map the
 plane's exceptions onto HTTP-style statuses: admission rejection -> 429,
-unknown corpus -> 404, malformed request -> 400.
+unknown corpus -> 404, malformed request -> 400, unexpected dispatch
+failure -> 500 (the connection stays open).
 """
 
 from __future__ import annotations
@@ -157,6 +158,11 @@ class GrepServer:
         except (KeyError, ValueError, TypeError) as exc:
             return {"id": rid, "ok": False, "status": 400,
                     "error": f"{type(exc).__name__}: {exc}"}
+        except Exception as exc:  # noqa: BLE001 — e.g. a failed dispatch
+            # fanned out of _run_batch; answer 500 and keep the connection
+            # alive instead of tearing it (and its queued requests) down
+            return {"id": rid, "ok": False, "status": 500,
+                    "error": "internal", "detail": f"{exc}"}
 
 
 class GrepClient:

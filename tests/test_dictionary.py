@@ -145,6 +145,38 @@ def test_bucketed_duplicate_patterns(rng):
         assert cb[0, order.index(64 + i)] == cb[0, order.index(i)]
 
 
+def test_canonical_epsmc_slot_overflow_bit_identity():
+    """An EPSMc CSR slot can hold MORE than P entries: patterns sharing a
+    repeated (or common) >= beta byte block register the same fingerprint
+    at every inspected offset, so occ.max() can reach P * stride.  The
+    canonical pow2 quantization must clamp slot_max against the plan's
+    TOTAL entry count, never against P — regression for a min(P, ...)
+    clamp that rounded slot_max DOWN and made _c_verify_csr skip live
+    entries (silently dropped matches on the serving path)."""
+    pats = [b"a" * 16, b"a" * 15 + b"b"]  # every aligned block is "aaaaaaaa"
+    raw = b"x" + b"a" * 60 + b"y" + b"a" * 15 + b"b" + b"a" * 20
+    text = np.frombuffer(raw, np.uint8).copy()
+    idx = engine.build_index(text)
+    flat = engine.compile_patterns(pats, bucket=False, automaton=False)
+    canon = engine.compile_patterns(
+        pats, bucket=True, automaton=False, canonical=True
+    )
+    (plan,) = canon
+    assert plan.c_slot_off is not None, "must exercise the CSR route"
+    assert plan.slot_max > len(pats), "overflow scenario: slot deeper than P"
+    np.testing.assert_array_equal(_counts(idx, flat), _counts(idx, canon))
+    np.testing.assert_array_equal(
+        np.asarray(engine.match_many(idx, flat)),
+        np.asarray(engine.match_many(idx, canon)),
+    )
+    # sanity vs the naive oracle, not just flat-vs-bucketed
+    order = engine.plan_order(canon)
+    cc = _counts(idx, canon)
+    for row in range(len(pats)):
+        pid = order[row]
+        assert cc[0, row] == baselines.naive_np(text, pats[pid]).sum()
+
+
 # ---------------------------------------------------------------------------
 # streaming / sharded seams
 # ---------------------------------------------------------------------------

@@ -186,6 +186,38 @@ def test_result_cache_hits_are_bit_identical(rng):
     assert np.array_equal(first.counts, again.counts)
 
 
+def test_open_bucket_not_reused_after_corpus_replacement():
+    """Replacing a corpus's content while a coalescing bucket is open must
+    not let later queries join the stale bucket: the bucket key carries the
+    content digest, so the parked query answers against the OLD index, the
+    new query against the NEW one, and the result cache (keyed by digest)
+    never stores a stale answer under the new content."""
+    old_text = b"needle" * 10 + b"x" * 100
+    new_text = b"x" * 160  # zero needles
+
+    async def main():
+        plane = QueryPlane(
+            ServiceConfig(coalesce_ms=60_000.0, flush_on_idle=False)
+        )
+        plane.add_corpus("c", old_text)
+        t1 = asyncio.create_task(plane.query("c", [b"needle"]))
+        await asyncio.sleep(0)  # t1 parks in the open bucket
+        plane.add_corpus("c", new_text)  # content replaced mid-bucket
+        t2 = asyncio.create_task(plane.query("c", [b"needle"]))
+        await asyncio.sleep(0)
+        assert len(plane._batches) == 2  # digest split the buckets
+        await plane.flush()
+        r1, r2 = await t1, await t2
+        r3 = await plane.query("c", [b"needle"])  # cache, new digest
+        await plane.close()
+        return r1, r2, r3
+
+    r1, r2, r3 = asyncio.run(main())
+    assert r1.counts[0] == 10   # parked query: old content's answer
+    assert r2.counts[0] == 0    # joining query: new content's answer
+    assert r3.cached and r3.counts[0] == 0
+
+
 # ---------------------------------------------------------------------------
 # admission control / backpressure
 # ---------------------------------------------------------------------------
@@ -248,6 +280,33 @@ def test_flush_on_idle_dispatch_clocked_batching(rng):
     assert sorted(r.batched for r in results) == [1] + [9] * 9
     expect = _oracle_counts(text, [b"needle"])
     assert all(np.array_equal(r.counts, expect) for r in results)
+
+
+def test_coalesce_zero_arms_no_timer(rng):
+    """coalesce_ms=0 under flush_on_idle means NO timer at all (the doc'd
+    'disables time-based coalescing') — previously a call_later(0) re-armed
+    itself every loop iteration for the whole duration of each dispatch.
+    Liveness comes from the idle-flush and the dispatch-completion flush."""
+    text = _mk_text(rng, 4_000)
+
+    async def main():
+        plane = QueryPlane(
+            ServiceConfig(coalesce_ms=0.0, result_cache_entries=0)
+        )
+        plane.add_corpus("c", text)
+        plane._inflight = 1  # park arrivals as if a dispatch were running
+        task = asyncio.create_task(plane.query("c", [b"needle"]))
+        await asyncio.sleep(0)
+        (batch,) = plane._batches.values()
+        assert batch.timer is None
+        plane._inflight = 0
+        await plane.flush()
+        r = await task
+        await plane.close()
+        return r
+
+    r = asyncio.run(main())
+    assert np.array_equal(r.counts, _oracle_counts(text, [b"needle"]))
 
 
 def test_rejection_does_not_leak_pending(rng):
@@ -324,6 +383,38 @@ def test_corpus_eviction_transparent_reload(rng):
     assert np.array_equal(r.counts, _oracle_counts(texts["c0"], [b"needle"]))
 
 
+def test_concurrent_reloads_share_one_loader_call(rng):
+    """A reload runs loader + index build on the executor (the event loop
+    stays responsive) and concurrent misses for the same corpus share ONE
+    in-flight reload instead of building the index N times."""
+    texts = {f"c{i}": _mk_text(rng, 8_000) for i in range(2)}
+    calls = []
+
+    def loader(cid):
+        calls.append(cid)
+        return texts[cid]
+
+    async def main():
+        plane = QueryPlane(
+            ServiceConfig(coalesce_ms=0.0,
+                          corpus_budget_bytes=_budget_for(list(texts.values()))),
+            loader=loader,
+        )
+        plane.add_corpus("c0", texts["c0"])
+        plane.add_corpus("c1", texts["c1"])  # evicts c0
+        rs = await asyncio.gather(
+            *[plane.query("c0", [b"needle"]) for _ in range(5)]
+        )
+        await plane.close()
+        return rs, plane.counters
+
+    rs, counters = asyncio.run(main())
+    assert calls == ["c0"]
+    assert counters["corpus_reloads"] == 1
+    expect = _oracle_counts(texts["c0"], [b"needle"])
+    assert all(np.array_equal(r.counts, expect) for r in rs)
+
+
 def test_corpus_get_refreshes_lru(rng):
     texts = [_mk_text(rng, 8_000) for _ in range(2)]
     cache = CorpusCache(1 << 62)
@@ -360,6 +451,33 @@ def test_server_roundtrip_matches_engine(rng):
         assert o["ok"] and o["counts"] == expect
     assert missing["status"] == 404 and missing["error"] == "unknown_corpus"
     assert stats["stats"]["requests"] >= 3
+
+
+def test_server_dispatch_failure_answers_500_and_keeps_connection(rng):
+    """An unexpected error out of the plane (e.g. the RuntimeError a failed
+    dispatch fans out to its futures) must come back as a 500 response, not
+    tear down the connection with no reply."""
+    text = _mk_text(rng, 4_000)
+
+    async def main():
+        plane = QueryPlane(ServiceConfig(coalesce_ms=1.0))
+        plane.add_corpus("c", text)
+
+        async def boom(*args, **kw):
+            raise RuntimeError("dispatch failed: injected")
+
+        plane.query = boom
+        async with GrepServer(plane) as (host, port):
+            client = await GrepClient.connect(host, port)
+            resp = await client.query("c", [b"needle"])
+            pong = await client.ping()  # connection survived the failure
+            await client.close()
+        return resp, pong
+
+    resp, pong = asyncio.run(main())
+    assert not resp["ok"] and resp["status"] == 500
+    assert "injected" in resp["detail"]
+    assert pong["ok"]
 
 
 def test_service_trace_passes_validator(rng, tmp_path):
